@@ -1,0 +1,35 @@
+"""Paper Fig. 1: token throughput + KV blocks loaded/iter vs batch size.
+
+Offloaded DSA serving (vLLM-SO+FT class) with a saturated queue and FIXED
+parallel batch size: throughput first rises with batch size, then collapses
+when the aggregate working set overflows the HBM cache (load storm).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import emit, header
+from repro.configs import get_config
+from repro.serving.simulator import SYSTEMS, ServingSimulator, SimConfig
+from repro.serving.trace import TraceConfig, generate_trace
+
+
+def main() -> None:
+    header("fig1_batch_size: throughput & loads vs fixed batch size "
+           "(LWM-7B, offload+FT, saturated queue)")
+    cfg = get_config("lwm-7b")
+    for bs in (2, 4, 6, 8, 12, 16, 24):
+        sim = ServingSimulator(cfg, SYSTEMS["vllm-so+ft"],
+                               sim=SimConfig(r_max=bs, seed=0))
+        trace = generate_trace(TraceConfig(request_rate=100.0,
+                                           num_requests=3 * bs, seed=1,
+                                           max_new_tokens=256))
+        m = sim.run(trace)
+        loads = float(np.mean(sim.loads_per_iter)) if sim.loads_per_iter else 0
+        emit("fig1", batch_size=bs,
+             tok_per_s=round(m.token_throughput, 2),
+             mean_blocks_loaded_per_iter=round(loads, 1))
+
+
+if __name__ == "__main__":
+    main()

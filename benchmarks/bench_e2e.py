@@ -1,0 +1,36 @@
+"""Paper Figs. 10-12: mean TTFT / token throughput / mean TBT vs request
+rate for vLLM / vLLM-S / vLLM-SO / SparseServe (LWM-7B + Llama3-8B,
+LongBench-shaped trace, discrete-event simulator on the A100 cost model)."""
+from __future__ import annotations
+
+from benchmarks.common import emit, header
+from repro.configs import get_config
+from repro.serving.simulator import SYSTEMS, ServingSimulator, SimConfig
+from repro.serving.trace import TraceConfig, generate_trace
+
+RATES = {"lwm-7b": (0.05, 0.1, 0.125, 0.15, 0.2),
+         "llama3-8b": (0.1, 0.2, 0.25, 0.3, 0.4)}
+MAXLEN = {"lwm-7b": 32768, "llama3-8b": 131072}
+SYSTEMS_RUN = ("vllm", "vllm-s", "vllm-so", "sparseserve")
+
+
+def main(num_requests: int = 32) -> None:
+    header("fig10-12_e2e: TTFT/throughput/TBT vs request rate")
+    for model in ("lwm-7b", "llama3-8b"):
+        cfg = get_config(model)
+        for rate in RATES[model]:
+            for name in SYSTEMS_RUN:
+                sim = ServingSimulator(cfg, SYSTEMS[name], sim=SimConfig())
+                trace = generate_trace(TraceConfig(
+                    request_rate=rate, num_requests=num_requests,
+                    max_prompt_len=MAXLEN[model], seed=2))
+                m = sim.run(trace)
+                emit("e2e", model=model, system=name, rate=rate,
+                     ttft_s=round(m.mean_ttft, 3),
+                     tbt_ms=round(m.mean_tbt * 1e3, 2),
+                     tok_per_s=round(m.token_throughput, 2),
+                     finished=m.num_finished)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,47 @@
+"""Paper Fig. 13: goodput ladder — max sustainable request rate under SLO
+(P99 TBT <= 25x decode iter, mean queue delay <= 2 s) as each SparseServe
+mechanism is added: SA -> +Offload -> +FT -> +WC -> +LP."""
+from __future__ import annotations
+
+from benchmarks.common import emit, header
+from repro.configs import get_config
+from repro.serving.metrics import meets_slo
+from repro.serving.simulator import SYSTEMS, ServingSimulator, SimConfig
+from repro.serving.trace import TraceConfig, generate_trace
+
+LADDER = ("vllm", "vllm-s", "vllm-so", "vllm-so+ft", "vllm-so+ft+wc",
+          "sparseserve")
+
+
+def max_goodput(model_cfg, system, rates, n=24) -> float:
+    best = 0.0
+    for rate in rates:
+        sim = ServingSimulator(model_cfg, SYSTEMS[system],
+                               sim=SimConfig(seed=0))
+        trace = generate_trace(TraceConfig(request_rate=rate,
+                                           num_requests=n, seed=3))
+        m = sim.run(trace)
+        lim = 25 * max(sim.decode_iter_time, 1e-3)
+        reqs = trace
+        if m.num_finished == n and meets_slo(reqs, m.total_time,
+                                             p99_tbt_limit=lim):
+            best = max(best, rate)
+    return best
+
+
+def main() -> None:
+    header("fig13_goodput: max sustainable rate under SLO, mechanism ladder")
+    rates = (0.05, 0.1, 0.15, 0.2, 0.25, 0.3, 0.4, 0.5)
+    for model in ("lwm-7b",):
+        cfg = get_config(model)
+        base = None
+        for system in LADDER:
+            g = max_goodput(cfg, system, rates)
+            if base is None and g > 0:
+                base = g
+            emit("fig13", model=model, system=system, goodput_rps=g,
+                 vs_vllm=round(g / base, 2) if base else 0.0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,55 @@
+"""Roofline summary (deliverable g): prints the calibrated 3-term table
+from the dry-run artifacts in results/.
+
+    PYTHONPATH=src python -m benchmarks.bench_roofline
+
+If results/roofline_pod1.json is missing, regenerate with:
+    python -m repro.launch.dryrun --arch all --shape all --out results/dryrun_pod1.json
+    python -m repro.launch.calibrate_run
+"""
+from __future__ import annotations
+
+import json
+import os
+
+from benchmarks.common import emit, header
+
+RESULTS = os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "results")
+
+
+def main() -> None:
+    path = os.path.join(RESULTS, "roofline_pod1.json")
+    if not os.path.exists(path):
+        print(f"roofline: {path} not found — run the dry-run + calibration "
+              f"first (see module docstring); skipping")
+        return
+    header("roofline: calibrated terms per (arch x shape), 16x16 mesh")
+    with open(path) as f:
+        recs = json.load(f)["records"]
+    for r in recs:
+        c = r.get("calibrated") or {}
+        if "t_compute_s" not in c:
+            continue
+        emit("roofline", arch=r["arch"], shape=r["shape"],
+             t_compute_s=round(c["t_compute_s"], 6),
+             t_memory_s=round(c["t_memory_s"], 6),
+             t_collective_s=round(c["t_collective_s"], 6),
+             dominant=c["dominant"],
+             useful=round(c["useful_flops_ratio"], 3))
+    opt = os.path.join(RESULTS, "optimized_pod1.json")
+    if os.path.exists(opt):
+        header("roofline: optimized (§Perf) variant per-device footprints")
+        with open(opt) as f:
+            orecs = json.load(f)["records"]
+        for r in orecs:
+            m = r.get("memory", {})
+            emit("optimized", arch=r["arch"], shape=r["shape"],
+                 variant=r["variant"],
+                 arg_gb=round(m.get("argument_size_in_bytes", 0) / 1e9, 2),
+                 coll_mb=round(r.get("collectives", {}).get(
+                     "bytes_per_device", 0) / 1e6, 1))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,32 @@
+"""Paper Fig. 15: working-set-aware batch size control — token throughput
+and mean KV block loads/iteration, with and without WC, vs request rate."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import emit, header
+from repro.configs import get_config
+from repro.serving.simulator import SYSTEMS, ServingSimulator, SimConfig
+from repro.serving.trace import TraceConfig, generate_trace
+
+
+def main() -> None:
+    header("fig15_ws_control: throughput & loads with/without WC")
+    cfg = get_config("lwm-7b")
+    for rate in (0.3, 0.5, 0.7, 1.0, 1.5):
+        row = {"rate": rate}
+        for label, system in (("no_wc", "vllm-so+ft"),
+                              ("wc", "vllm-so+ft+wc")):
+            sim = ServingSimulator(cfg, SYSTEMS[system], sim=SimConfig(seed=0))
+            trace = generate_trace(TraceConfig(request_rate=rate,
+                                               num_requests=24, seed=4))
+            m = sim.run(trace)
+            loads = float(np.mean(sim.loads_per_iter)) \
+                if sim.loads_per_iter else 0.0
+            row[f"tok_per_s_{label}"] = round(m.token_throughput, 2)
+            row[f"loads_{label}"] = round(loads, 1)
+        emit("fig15", **row)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,24 @@
+"""Shared benchmark helpers: CSV emission, default model/trace configs."""
+from __future__ import annotations
+
+import sys
+import time
+from typing import Any, Iterable
+
+
+def emit(name: str, **fields: Any) -> None:
+    kv = ",".join(f"{k}={v}" for k, v in fields.items())
+    print(f"{name},{kv}", flush=True)
+
+
+def header(title: str) -> None:
+    print(f"\n### {title}", flush=True)
+
+
+class Timer:
+    def __enter__(self):
+        self.t0 = time.perf_counter()
+        return self
+
+    def __exit__(self, *a):
+        self.dt = time.perf_counter() - self.t0

@@ -1,0 +1,53 @@
+"""Benchmark harness — one module per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--only fig4,fig8,...]
+
+Emits ``name,key=value,...`` CSV lines per figure (see each module's
+docstring for the paper artifact it reproduces).
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+MODULES = {
+    "fig1": "benchmarks.bench_batch_size",
+    "fig4_14": "benchmarks.bench_transfer",
+    "fig8": "benchmarks.bench_overlap",
+    "fig10_12": "benchmarks.bench_e2e",
+    "fig13": "benchmarks.bench_goodput",
+    "fig15": "benchmarks.bench_ws_control",
+    "fig16": "benchmarks.bench_prefill",
+    "table1": "benchmarks.bench_accuracy",
+    "roofline": "benchmarks.bench_roofline",
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default="",
+                    help=f"comma list of {list(MODULES)}")
+    args = ap.parse_args()
+    names = [n.strip() for n in args.only.split(",") if n.strip()] \
+        or list(MODULES)
+    import importlib
+    t0 = time.perf_counter()
+    failures = []
+    for name in names:
+        mod = importlib.import_module(MODULES[name])
+        t = time.perf_counter()
+        try:
+            mod.main()
+        except Exception as e:  # noqa: BLE001
+            failures.append(name)
+            print(f"BENCH FAIL {name}: {type(e).__name__}: {e}", flush=True)
+        print(f"[{name} done in {time.perf_counter()-t:.1f}s]", flush=True)
+    print(f"\nall benchmarks done in {time.perf_counter()-t0:.1f}s; "
+          f"{len(failures)} failed {failures or ''}")
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

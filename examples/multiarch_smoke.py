@@ -1,0 +1,38 @@
+"""Run one train step + one serve step on EVERY assigned architecture's
+smoke variant — the 10-architecture support matrix in one script.
+
+    PYTHONPATH=src python examples/multiarch_smoke.py
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import ASSIGNED_ARCHS, get_smoke_config
+from repro.models import model as M
+
+
+def main():
+    key = jax.random.PRNGKey(0)
+    print(f"{'arch':20s} {'type':7s} {'loss':>8s} {'decode ok':>9s}")
+    for arch in ASSIGNED_ARCHS:
+        cfg = get_smoke_config(arch)
+        params = M.init_params(cfg, key, jnp.float32)
+        B, S = 2, 64
+        batch = {"tokens": jnp.full((B, S), 3, jnp.int32),
+                 "labels": jnp.ones((B, S), jnp.int32)}
+        if cfg.is_encoder_decoder:
+            batch["frames"] = jnp.ones((B, 32, cfg.d_model), jnp.float32) * .01
+        if cfg.frontend == "vit_patch_stub":
+            batch["patch_embeds"] = jnp.ones(
+                (B, cfg.num_patches, cfg.d_model), jnp.float32) * .01
+        loss, _ = M.forward_train(params, cfg, batch, remat=False)
+        extra = cfg.num_patches if cfg.frontend == "vit_patch_stub" else 0
+        nb = (S + extra) // cfg.dsa.block_size + 2
+        _, state = M.prefill(params, cfg, batch, nb, cache_dtype=jnp.float32)
+        lg, _ = M.decode_step(params, cfg, jnp.array([5, 7], jnp.int32), state)
+        ok = bool(jnp.all(jnp.isfinite(lg)))
+        print(f"{arch:20s} {cfg.arch_type:7s} {float(loss):8.4f} {str(ok):>9s}")
+
+
+if __name__ == "__main__":
+    main()

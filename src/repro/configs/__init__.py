@@ -1,0 +1,44 @@
+"""Architecture config registry.
+
+Every assigned architecture is a module exporting ``CONFIG`` (the exact
+assigned full-scale config, source cited) and ``smoke_config()`` (a reduced
+variant of the same family: <=2 layers, d_model<=512, <=4 experts) for CPU
+smoke tests.  Select with ``--arch <id>`` in the launchers.
+"""
+from __future__ import annotations
+
+import importlib
+from typing import Dict, List
+
+from repro.models.common import ModelConfig
+
+_ARCH_MODULES = {
+    "kimi-k2-1t-a32b": "repro.configs.kimi_k2_1t_a32b",
+    "minicpm3-4b": "repro.configs.minicpm3_4b",
+    "jamba-v0.1-52b": "repro.configs.jamba_v0_1_52b",
+    "arctic-480b": "repro.configs.arctic_480b",
+    "whisper-small": "repro.configs.whisper_small",
+    "internvl2-2b": "repro.configs.internvl2_2b",
+    "rwkv6-1.6b": "repro.configs.rwkv6_1_6b",
+    "granite-20b": "repro.configs.granite_20b",
+    "qwen2.5-3b": "repro.configs.qwen2_5_3b",
+    "qwen2-0.5b": "repro.configs.qwen2_0_5b",
+    # the paper's own evaluation models
+    "lwm-7b": "repro.configs.lwm_7b",
+    "llama3-8b": "repro.configs.llama3_8b",
+}
+
+ASSIGNED_ARCHS: List[str] = list(_ARCH_MODULES)[:10]
+ALL_ARCHS: List[str] = list(_ARCH_MODULES)
+
+
+def get_config(name: str) -> ModelConfig:
+    if name not in _ARCH_MODULES:
+        raise KeyError(f"unknown arch {name!r}; known: {ALL_ARCHS}")
+    return importlib.import_module(_ARCH_MODULES[name]).CONFIG
+
+
+def get_smoke_config(name: str) -> ModelConfig:
+    if name not in _ARCH_MODULES:
+        raise KeyError(f"unknown arch {name!r}; known: {ALL_ARCHS}")
+    return importlib.import_module(_ARCH_MODULES[name]).smoke_config()

@@ -1,0 +1,246 @@
+"""Dynamic Sparse Attention (DSA) primitives — paper §2.2.
+
+DSAs partition the KV cache into blocks of ``block_size`` consecutive tokens,
+keep small per-block metadata, and per query token (1) estimate each block's
+criticality from the metadata, (2) select the top-k blocks, (3) run attention
+over only those blocks.
+
+Two metadata constructions are supported (both from the literature the paper
+builds on):
+
+* ``"mean"``   — the mean key vector of the block (InfLLM [45]).
+* ``"cuboid"`` — the per-dimension min/max bounding cuboid of the block's
+  keys (Quest [41] / ArkVale [9]); criticality is the *upper bound* of
+  q·k over the cuboid:  sum_d max(q_d * min_d, q_d * max_d).
+
+Shape conventions (decode, single query token):
+    q          (B, Hq, D)
+    kv pool    (B, Hkv, NB, bs, D)     -- paper's (H, N, D) head-major layout
+    meta mean  (B, Hkv, NB, D)
+    meta cuboid(B, Hkv, NB, 2, D)      -- [min, max]
+    scores     (B, Hkv, NB)            -- group-reduced over GQA query heads
+    selection  (B, Hkv, K) int32
+
+All functions are pure jnp and jit/shard_map friendly.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import DSAConfig
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# Metadata construction (runs when a block fills up — KV manager / prefill)
+# ---------------------------------------------------------------------------
+
+def build_block_metadata(keys: jax.Array, method: str = "cuboid",
+                         valid: Optional[jax.Array] = None) -> jax.Array:
+    """Build per-block metadata from block keys.
+
+    keys:  (..., NB, bs, D)
+    valid: optional (..., NB, bs) bool — tokens actually written.
+    returns: mean -> (..., NB, D); cuboid -> (..., NB, 2, D)
+    """
+    kf = keys.astype(jnp.float32)
+    if method == "mean":
+        if valid is None:
+            return jnp.mean(kf, axis=-2)
+        v = valid[..., None].astype(jnp.float32)
+        denom = jnp.maximum(jnp.sum(v, axis=-2), 1.0)
+        return jnp.sum(kf * v, axis=-2) / denom
+    elif method == "cuboid":
+        if valid is None:
+            mn = jnp.min(kf, axis=-2)
+            mx = jnp.max(kf, axis=-2)
+        else:
+            v = valid[..., None]
+            mn = jnp.min(jnp.where(v, kf, jnp.inf), axis=-2)
+            mx = jnp.max(jnp.where(v, kf, -jnp.inf), axis=-2)
+            # fully-empty blocks: zero cuboid (scored but masked elsewhere)
+            any_valid = jnp.any(valid, axis=-1)[..., None]
+            mn = jnp.where(any_valid, mn, 0.0)
+            mx = jnp.where(any_valid, mx, 0.0)
+        return jnp.stack([mn, mx], axis=-2)
+    raise ValueError(f"unknown DSA metadata method: {method}")
+
+
+def metadata_shape(cfg: DSAConfig, num_blocks: int, head_dim: int,
+                   prefix=()) -> Tuple[int, ...]:
+    if cfg.metadata == "mean":
+        return (*prefix, num_blocks, head_dim)
+    return (*prefix, num_blocks, 2, head_dim)
+
+
+# ---------------------------------------------------------------------------
+# Block criticality scoring
+# ---------------------------------------------------------------------------
+
+def score_blocks(q: jax.Array, meta: jax.Array, method: str = "cuboid",
+                 group_reduce: str = "max") -> jax.Array:
+    """Estimate block criticality for each query head, reduce over GQA group.
+
+    q:    (B, Hq, D)
+    meta: (B, Hkv, NB, D) or (B, Hkv, NB, 2, D)
+    returns scores (B, Hkv, NB) float32
+    """
+    B, Hq, D = q.shape
+    Hkv = meta.shape[1]
+    group = Hq // Hkv
+    qf = q.astype(jnp.float32).reshape(B, Hkv, group, D)
+    if method == "mean":
+        # (B,Hkv,G,D) x (B,Hkv,NB,D) -> (B,Hkv,G,NB)
+        s = jnp.einsum("bhgd,bhnd->bhgn", qf, meta.astype(jnp.float32))
+    elif method == "cuboid":
+        mn = meta[..., 0, :].astype(jnp.float32)   # (B,Hkv,NB,D)
+        mx = meta[..., 1, :].astype(jnp.float32)
+        lo = jnp.einsum("bhgd,bhnd->bhgn", qf, mn)
+        hi = jnp.einsum("bhgd,bhnd->bhgn", qf, mx)
+        s = jnp.maximum(lo, hi)  # == sum_d max(q_d*mn_d, q_d*mx_d) per-dim?
+        # NOTE: true Quest bound maxes per-dimension BEFORE summing; do that:
+        pos = jnp.maximum(qf, 0.0)
+        neg = jnp.minimum(qf, 0.0)
+        s = (jnp.einsum("bhgd,bhnd->bhgn", pos, mx)
+             + jnp.einsum("bhgd,bhnd->bhgn", neg, mn))
+    else:
+        raise ValueError(f"unknown DSA metadata method: {method}")
+    if group_reduce == "max":
+        return jnp.max(s, axis=2)
+    elif group_reduce == "sum":
+        return jnp.sum(s, axis=2)
+    raise ValueError(group_reduce)
+
+
+# ---------------------------------------------------------------------------
+# Top-k block selection
+# ---------------------------------------------------------------------------
+
+def select_blocks(scores: jax.Array, cfg: DSAConfig, cur_len: jax.Array,
+                  ) -> Tuple[jax.Array, jax.Array]:
+    """Select top-k KV blocks per (batch, kv-head).
+
+    scores : (B, Hkv, NB) float32
+    cur_len: (B,) int32 — tokens currently in the cache (per request).
+    returns (indices (B,Hkv,K) int32, sel_valid (B,Hkv,K) bool)
+
+    Invalid (unwritten) blocks are masked out.  Sink blocks (prefix) and the
+    most recent blocks are force-included by score override — DSAs keep
+    attention sinks + local context unconditionally.
+    """
+    B, Hkv, NB = scores.shape
+    k = min(cfg.top_k_blocks, NB)
+    blk_ids = jnp.arange(NB, dtype=jnp.int32)
+    n_valid = jnp.ceil(cur_len.astype(jnp.float32) / cfg.block_size
+                       ).astype(jnp.int32)                       # (B,)
+    valid = blk_ids[None, :] < n_valid[:, None]                   # (B, NB)
+    s = jnp.where(valid[:, None, :], scores, NEG_INF)
+    # force-include sinks + recent blocks
+    if cfg.sink_blocks > 0:
+        sink = (blk_ids[None, :] < jnp.minimum(cfg.sink_blocks, n_valid)[:, None])
+        s = jnp.where(sink[:, None, :] & valid[:, None, :], jnp.inf, s)
+    if cfg.recent_blocks > 0:
+        recent = (blk_ids[None, :] >= (n_valid - cfg.recent_blocks)[:, None])
+        s = jnp.where(recent[:, None, :] & valid[:, None, :], jnp.inf, s)
+    top_scores, top_idx = jax.lax.top_k(s, k)                     # (B,Hkv,K)
+    sel_valid = top_scores > NEG_INF / 2
+    top_idx = jnp.where(sel_valid, top_idx, 0).astype(jnp.int32)
+    return top_idx, sel_valid
+
+
+# ---------------------------------------------------------------------------
+# Reference block-sparse decode attention (pure jnp oracle; the Pallas
+# kernel in kernels/sparse_decode_attention.py matches this)
+# ---------------------------------------------------------------------------
+
+def sparse_decode_attention_ref(
+        q: jax.Array,            # (B, Hq, D)
+        k_pool: jax.Array,       # (B, Hkv, NB, bs, D)
+        v_pool: jax.Array,       # (B, Hkv, NB, bs, Dv)
+        block_idx: jax.Array,    # (B, Hkv, K) int32
+        sel_valid: jax.Array,    # (B, Hkv, K) bool
+        cur_len: jax.Array,      # (B,) int32
+        scale: Optional[float] = None) -> jax.Array:
+    """Attention over only the selected KV blocks.  Returns (B, Hq, Dv)."""
+    B, Hq, D = q.shape
+    _, Hkv, NB, bs, _ = k_pool.shape
+    Dv = v_pool.shape[-1]
+    group = Hq // Hkv
+    scale = scale if scale is not None else 1.0 / (D ** 0.5)
+
+    # gather selected blocks: (B, Hkv, K, bs, D)
+    k_sel = jnp.take_along_axis(k_pool, block_idx[..., None, None], axis=2)
+    v_sel = jnp.take_along_axis(v_pool, block_idx[..., None, None], axis=2)
+
+    qf = q.astype(jnp.float32).reshape(B, Hkv, group, D)
+    s = jnp.einsum("bhgd,bhksd->bhgks", qf, k_sel.astype(jnp.float32)) * scale
+
+    # token-validity inside selected blocks: global position < cur_len
+    tok_in_blk = jnp.arange(bs, dtype=jnp.int32)
+    pos = block_idx[..., None] * bs + tok_in_blk                  # (B,Hkv,K,bs)
+    tok_valid = pos < cur_len[:, None, None, None]
+    mask = tok_valid & sel_valid[..., None]
+    s = jnp.where(mask[:, :, None, :, :], s, NEG_INF)
+
+    s = s.reshape(B, Hkv, group, -1)
+    p = jax.nn.softmax(s, axis=-1)
+    v_flat = v_sel.astype(jnp.float32).reshape(B, Hkv, -1, Dv)
+    o = jnp.einsum("bhgt,bhtd->bhgd", p, v_flat)
+    return o.reshape(B, Hq, Dv).astype(q.dtype)
+
+
+def sparse_decode_attention_partial(
+        q: jax.Array,            # (B, Hq, D)
+        k_pool: jax.Array,       # (B, Hkv, NB_loc, bs, D) — LOCAL shard
+        v_pool: jax.Array,       # (B, Hkv, NB_loc, bs, Dv)
+        block_idx: jax.Array,    # (B, Hkv, K) int32 LOCAL block ids
+        sel_valid: jax.Array,    # (B, Hkv, K) bool (False for remote blocks)
+        cur_len: jax.Array,      # (B,) int32 GLOBAL length
+        block_offset,            # global id of this shard's block 0
+        scale: Optional[float] = None):
+    """Unnormalized flash-style partials for context-parallel decode.
+
+    Returns (acc (B,Hq,Dv), m (B,Hq), l (B,Hq)): softmax statistics over the
+    LOCAL selected blocks only; shards combine with the usual logsumexp
+    merge (pmax m, rescale, psum l/acc).  Token validity uses GLOBAL
+    positions via block_offset."""
+    B, Hq, D = q.shape
+    _, Hkv, NB, bs, _ = k_pool.shape
+    Dv = v_pool.shape[-1]
+    group = Hq // Hkv
+    scale = scale if scale is not None else 1.0 / (D ** 0.5)
+
+    k_sel = jnp.take_along_axis(k_pool, block_idx[..., None, None], axis=2)
+    v_sel = jnp.take_along_axis(v_pool, block_idx[..., None, None], axis=2)
+    qf = q.astype(jnp.float32).reshape(B, Hkv, group, D)
+    s = jnp.einsum("bhgd,bhksd->bhgks", qf, k_sel.astype(jnp.float32)) * scale
+
+    tok_in_blk = jnp.arange(bs, dtype=jnp.int32)
+    pos = (block_idx[..., None] + block_offset) * bs + tok_in_blk
+    tok_valid = pos < cur_len[:, None, None, None]
+    mask = tok_valid & sel_valid[..., None]
+    s = jnp.where(mask[:, :, None, :, :], s, NEG_INF)
+
+    s = s.reshape(B, Hkv, group, -1)
+    m = jnp.max(s, axis=-1)                                  # (B,Hkv,G)
+    p = jnp.exp(s - m[..., None])
+    p = jnp.where(s <= NEG_INF / 2, 0.0, p)                  # empty shards
+    l = jnp.sum(p, axis=-1)
+    v_flat = v_sel.astype(jnp.float32).reshape(B, Hkv, -1, Dv)
+    acc = jnp.einsum("bhgt,bhtd->bhgd", p, v_flat)
+    return (acc.reshape(B, Hq, Dv), m.reshape(B, Hq), l.reshape(B, Hq))
+
+
+def full_decode_attention_ref(q, k_pool, v_pool, cur_len, scale=None):
+    """Dense (non-sparse) decode attention oracle over the whole pool."""
+    B, Hq, D = q.shape
+    _, Hkv, NB, bs, Dv = v_pool.shape
+    all_idx = jnp.broadcast_to(jnp.arange(NB, dtype=jnp.int32),
+                               (B, Hkv, NB))
+    valid = jnp.ones((B, Hkv, NB), dtype=bool)
+    return sparse_decode_attention_ref(q, k_pool, v_pool, all_idx, valid,
+                                       cur_len, scale)

@@ -1,0 +1,240 @@
+"""Hierarchical HBM–DRAM KV cache manager (paper §3.1 "KV Cache Manager").
+
+Control plane: block-table bookkeeping, HBM LRU cache, transfer accounting.
+Data plane: host-resident block pools (numpy) + device working buffers, with
+FlashH2D (fused gather) loading and FlashD2H (contiguous flush + deferred
+scatter) saving — `repro.kernels.gather_blocks` / `scatter_blocks`.
+
+Blocks are tracked per (layer, kv_head, block_id) — the paper's per-head
+granularity (Fig. 5, (H, N, D) layout) — so transfer sizes and hit rates
+match what an A100/v5e deployment would see.
+
+All byte/transfer counters feed the cost model (`serving/costmodel.py`)
+and the Fig. 4 / Fig. 14 / Fig. 15 benchmarks.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+from typing import Dict, List, Optional, Set, Tuple
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class KVGeometry:
+    """Shape of one request's KV cache."""
+    num_layers: int          # attention layers only
+    num_kv_heads: int
+    block_size: int          # tokens per block
+    head_dim: int            # cached dim per token per head (MLA: latent)
+    dtype_bytes: int = 2     # bf16
+    kv_factor: int = 2       # k and v (MLA latent: 1)
+
+    @property
+    def block_bytes_per_head(self) -> int:
+        return self.block_size * self.head_dim * self.dtype_bytes * self.kv_factor
+
+    @property
+    def block_bytes(self) -> int:
+        """One block id across all layers+heads (working-set accounting)."""
+        return self.block_bytes_per_head * self.num_kv_heads * self.num_layers
+
+    def tokens_bytes(self, n_tokens: int) -> int:
+        return (n_tokens * self.head_dim * self.dtype_bytes * self.kv_factor
+                * self.num_kv_heads * self.num_layers)
+
+
+@dataclasses.dataclass
+class TransferStats:
+    h2d_bytes: int = 0
+    h2d_calls: int = 0          # fused kernel launches (FlashH2D)
+    h2d_blocks: int = 0         # fragmented blocks moved
+    d2h_bytes: int = 0
+    d2h_calls: int = 0
+    d2h_blocks: int = 0
+    evictions: int = 0
+    hits: int = 0
+    misses: int = 0
+
+    def merge(self, o: "TransferStats") -> None:
+        for f in dataclasses.fields(TransferStats):
+            setattr(self, f.name, getattr(self, f.name) + getattr(o, f.name))
+
+
+class HBMCache:
+    """LRU cache of HBM-resident KV blocks for ONE request.
+
+    Keys are (layer, block_id); all kv heads of a block move together (the
+    per-head transfer granularity is reflected in byte accounting).  The LRU
+    policy exploits the temporal locality of DSA block selection —
+    consecutive query tokens select highly-overlapping blocks (§3.1/Fig. 8).
+    """
+
+    def __init__(self, geom: KVGeometry, capacity_blocks: int):
+        self.geom = geom
+        self.capacity = capacity_blocks            # in (layer, block) units
+        self._lru: "collections.OrderedDict[Tuple[int,int], bool]" = \
+            collections.OrderedDict()
+        self.stats = TransferStats()
+
+    def resident(self, layer: int, block: int) -> bool:
+        return (layer, block) in self._lru
+
+    @property
+    def num_resident(self) -> int:
+        return len(self._lru)
+
+    def access(self, layer: int, blocks: List[int]) -> List[int]:
+        """Touch `blocks` for `layer`; return the MISSING block ids (to load).
+
+        Evicts LRU entries beyond capacity.  One call = one decode-step
+        selection for one layer = one fused FlashH2D launch if any misses.
+        """
+        missing = []
+        for b in blocks:
+            key = (layer, b)
+            if key in self._lru:
+                self._lru.move_to_end(key)
+                self.stats.hits += 1
+            else:
+                missing.append(b)
+                self.stats.misses += 1
+        for b in missing:
+            self._lru[(layer, b)] = True
+        while len(self._lru) > self.capacity:
+            self._lru.popitem(last=False)
+            self.stats.evictions += 1
+        if missing:
+            nbytes = len(missing) * self.geom.block_bytes_per_head * \
+                self.geom.num_kv_heads
+            self.stats.h2d_calls += 1
+            self.stats.h2d_blocks += len(missing)
+            self.stats.h2d_bytes += nbytes
+        return missing
+
+    def insert(self, layer: int, block: int) -> None:
+        """Insert a freshly produced block (decode append) without a load."""
+        self._lru[(layer, block)] = True
+        self._lru.move_to_end((layer, block))
+        while len(self._lru) > self.capacity:
+            self._lru.popitem(last=False)
+            self.stats.evictions += 1
+
+    def drop_layer(self, layer: int) -> int:
+        """Evict all blocks of one layer (layer-segmented prefill §3.4)."""
+        keys = [k for k in self._lru if k[0] == layer]
+        for k in keys:
+            del self._lru[k]
+        return len(keys)
+
+
+class HostPool:
+    """Host-DRAM block pool for ONE request (data plane).
+
+    Stores K/V blocks as numpy arrays shaped (L, Hkv, NB, bs, D).  Saving
+    follows FlashD2H: the contiguous per-iteration KV stripe is appended to
+    a staging buffer in one "memcpy" and scattered into blocks lazily
+    (``flush``), mirroring the paper's CPU-assisted two-phase save.
+    """
+
+    def __init__(self, geom: KVGeometry, num_blocks: int):
+        g = geom
+        self.geom = g
+        self.num_blocks = num_blocks
+        shape = (g.num_layers, g.num_kv_heads, num_blocks, g.block_size,
+                 g.head_dim)
+        self.k = np.zeros(shape, np.float32)
+        self.v = np.zeros(shape, np.float32) if g.kv_factor == 2 else None
+        self._staging: List[Tuple[int, int, np.ndarray, Optional[np.ndarray]]] = []
+        self.stats = TransferStats()
+
+    def save_contiguous(self, layer: int, start_token: int, k_new: np.ndarray,
+                        v_new: Optional[np.ndarray]) -> None:
+        """Phase 1 of FlashD2H: one contiguous D2H transfer into staging.
+
+        k_new/v_new: (Hkv, T, D) for T new tokens starting at start_token."""
+        nbytes = k_new.nbytes * (2 if v_new is not None else 1)
+        self.stats.d2h_calls += 1
+        self.stats.d2h_bytes += nbytes
+        self._staging.append((layer, start_token, np.asarray(k_new),
+                              None if v_new is None else np.asarray(v_new)))
+
+    def flush(self) -> int:
+        """Phase 2 of FlashD2H: CPU-side scatter of staged stripes into the
+        per-head block layout.  Returns blocks written."""
+        g = self.geom
+        written = 0
+        for layer, start, k_new, v_new in self._staging:
+            T = k_new.shape[1]
+            t0 = 0
+            while t0 < T:
+                blk = (start + t0) // g.block_size
+                off = (start + t0) % g.block_size
+                # split on block boundaries (start may be mid-block)
+                t1 = min(t0 + (g.block_size - off), T)
+                self.k[layer, :, blk, off:off + (t1 - t0)] = k_new[:, t0:t1]
+                if v_new is not None:
+                    self.v[layer, :, blk, off:off + (t1 - t0)] = v_new[:, t0:t1]
+                written += 1
+                self.stats.d2h_blocks += 1
+                t0 = t1
+        self._staging.clear()
+        return written
+
+    def load_blocks(self, layer: int, blocks: List[int]
+                    ) -> Tuple[np.ndarray, Optional[np.ndarray]]:
+        """FlashH2D data plane: fused gather of fragmented blocks.
+
+        Returns (k (Hkv, K, bs, D), v or None)."""
+        idx = np.asarray(blocks, np.int32)
+        k = self.k[layer][:, idx]
+        v = None if self.v is None else self.v[layer][:, idx]
+        nbytes = k.nbytes * (1 if v is None else 2)
+        self.stats.h2d_calls += 1
+        self.stats.h2d_blocks += len(blocks) * self.geom.num_kv_heads
+        self.stats.h2d_bytes += nbytes
+        return k, v
+
+
+class KVCacheManager:
+    """System-wide manager: per-request HBM caches + host pools + global
+    HBM budget (M_avl feeds the scheduler's Algorithm 1)."""
+
+    def __init__(self, geom: KVGeometry, hbm_budget_bytes: int,
+                 host_budget_bytes: Optional[int] = None):
+        self.geom = geom
+        self.hbm_budget_bytes = hbm_budget_bytes
+        self.host_budget_bytes = host_budget_bytes
+        self.caches: Dict[str, HBMCache] = {}
+        self.pools: Dict[str, HostPool] = {}
+        self._retired_stats = TransferStats()   # stats of released requests
+
+    # -- lifecycle ---------------------------------------------------------
+    def register(self, req_id: str, max_tokens: int,
+                 hbm_blocks_per_request: int) -> None:
+        nb = -(-max_tokens // self.geom.block_size)
+        self.caches[req_id] = HBMCache(self.geom, hbm_blocks_per_request)
+        self.pools[req_id] = HostPool(self.geom, nb)
+
+    def release(self, req_id: str) -> None:
+        c = self.caches.pop(req_id, None)
+        p = self.pools.pop(req_id, None)
+        if c is not None:
+            self._retired_stats.merge(c.stats)
+        if p is not None:
+            self._retired_stats.merge(p.stats)
+
+    # -- accounting --------------------------------------------------------
+    def hbm_used_bytes(self) -> int:
+        per_lb = (self.geom.block_bytes_per_head * self.geom.num_kv_heads)
+        return sum(c.num_resident * per_lb for c in self.caches.values())
+
+    def total_stats(self) -> TransferStats:
+        s = TransferStats()
+        s.merge(self._retired_stats)
+        for c in self.caches.values():
+            s.merge(c.stats)
+        for p in self.pools.values():
+            s.merge(p.stats)
+        return s

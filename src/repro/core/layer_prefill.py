@@ -1,0 +1,103 @@
+"""Layer-segmented prefill planner (paper §3.4).
+
+Prefill is divided into LAYER segments processed in separate hybrid batches.
+After layer *l* runs over the whole prompt, its KV blocks are saved to DRAM
+(FlashD2H) and immediately evicted from HBM — the prefill HBM footprint is
+bounded by ONE layer of KV at all times.  The residual-stream activations
+(B, S, d) are carried between iterations to resume at layer l+1.
+
+If one layer over the whole prompt would exceed the TBT SLO, the layer is
+further split into token chunks ("combination with chunked prefill") —
+``plan_segments`` emits (layer, chunk) steps; chunk c of layer l attends to
+chunks 0..c of the SAME layer, so the per-layer KV context is still bounded
+to one layer.
+
+``max_inject_tokens`` follows the paper's fairness convention (§4.2): to
+inject the same total token work per iteration as chunked prefill with
+chunk size B, set max_inject_tokens = B * L.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Iterator, List, Optional, Tuple
+
+
+@dataclasses.dataclass(frozen=True)
+class PrefillSegment:
+    layer: int
+    chunk_start: int      # token offset within the prompt
+    chunk_len: int
+    is_last_chunk_of_layer: bool
+    is_last: bool         # final segment of the whole prefill
+
+
+def plan_segments(prompt_len: int, num_layers: int,
+                  max_tokens_per_step: int) -> List[PrefillSegment]:
+    """Static plan of all (layer, chunk) prefill steps for one request.
+
+    max_tokens_per_step bounds the tokens processed in a single batch
+    (derived from maxInjectToken / TBT SLO).  If >= prompt_len, each layer
+    is one segment (pure layer-segmented prefill)."""
+    chunk = min(max(1, max_tokens_per_step), prompt_len)
+    n_chunks = math.ceil(prompt_len / chunk)
+    segs: List[PrefillSegment] = []
+    for l in range(num_layers):
+        for c in range(n_chunks):
+            start = c * chunk
+            clen = min(chunk, prompt_len - start)
+            segs.append(PrefillSegment(
+                layer=l, chunk_start=start, chunk_len=clen,
+                is_last_chunk_of_layer=(c == n_chunks - 1),
+                is_last=(l == num_layers - 1 and c == n_chunks - 1)))
+    return segs
+
+
+@dataclasses.dataclass
+class LayerPrefillState:
+    """Mutable per-request execution cursor + carried activations.
+
+    hidden: residual stream after the last completed layer (host-side
+    between iterations; the paper saves activation states the same way)."""
+    segments: List[PrefillSegment]
+    next_idx: int = 0
+    hidden: Optional[object] = None          # (B, S, d) array
+    positions: Optional[object] = None
+    enc_kvs: Optional[object] = None         # whisper cross-attn KV
+    rec_states: Optional[list] = None        # mamba/rwkv per-layer states
+
+    @property
+    def done(self) -> bool:
+        return self.next_idx >= len(self.segments)
+
+    def peek(self) -> PrefillSegment:
+        return self.segments[self.next_idx]
+
+    def advance(self) -> PrefillSegment:
+        seg = self.segments[self.next_idx]
+        self.next_idx += 1
+        return seg
+
+
+def segment_tokens_for_iteration(prompt_len: int, num_layers: int,
+                                 max_inject_tokens: int) -> int:
+    """How many prompt tokens one iteration may process.
+
+    Layer-segmented prefill touches `prompt_len` tokens per layer step but
+    only ONE layer — its per-iteration compute equals prompt_len tokens of
+    one layer.  Normalised to whole-model token work it is
+    prompt_len / num_layers; the paper's maxInjectToken bounds exactly this
+    so that layer-segmented and chunked prefill inject equal work."""
+    whole_model_tokens = max(1, max_inject_tokens)
+    per_layer_tokens = whole_model_tokens * num_layers
+    return min(prompt_len, per_layer_tokens)
+
+
+def hbm_footprint_tokens(prompt_len: int, mode: str, num_layers: int,
+                         tokens_done: int = 0) -> int:
+    """Token-layer units of KV resident in HBM during prefill (Fig. 16a
+    rationale).  chunked: tokens_done * L grows; layer-segmented: <= prompt
+    tokens of ONE layer."""
+    if mode == "chunked":
+        return tokens_done * num_layers
+    return prompt_len

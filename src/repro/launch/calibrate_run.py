@@ -1,0 +1,85 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST precede every other import (jax locks device count on first init).
+"""Run the two-point cost calibration for the single-pod roofline table.
+
+    PYTHONPATH=src python -m repro.launch.calibrate_run \
+        --in results/dryrun_pod1.json --out results/roofline_pod1.json
+
+Reads the raw dry-run records (whose scan-over-layers costs undercount by
+~num_layers — see repro/roofline/calibrate.py), compiles the unrolled
+u / 2u-layer calibration variants per (arch, shape), and rewrites the
+roofline terms from the calibrated per-device costs.
+"""
+import argparse
+import json
+import sys
+import time
+
+from repro.configs import get_config
+from repro.launch.mesh import make_production_mesh
+from repro.roofline.analysis import (HBM_BW, ICI_BW, PEAK_FLOPS, model_flops)
+from repro.roofline.calibrate import calibrated_cost
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--in", dest="inp", default="results/dryrun_pod1.json")
+    ap.add_argument("--out", default="results/roofline_pod1.json")
+    ap.add_argument("--only", default="", help="arch:shape filter")
+    args = ap.parse_args(argv)
+
+    with open(args.inp) as f:
+        data = json.load(f)
+    mesh = make_production_mesh(multi_pod=False)
+    chips = mesh.devices.size
+
+    out = []
+    for rec in data["records"]:
+        arch, shape = rec["arch"], rec["shape"]
+        if args.only and f"{arch}:{shape}" != args.only:
+            continue
+        cfg = get_config(arch)
+        t0 = time.perf_counter()
+        try:
+            cal = calibrated_cost(cfg, shape, mesh)
+        except Exception as e:  # noqa: BLE001
+            print(f"FAIL calib {arch} x {shape}: {type(e).__name__}: {e}",
+                  flush=True)
+            rec["calibrated"] = {"error": str(e)}
+            out.append(rec)
+            continue
+        flops_g = cal["flops"] * chips
+        bytes_g = cal["bytes"] * chips
+        t_c = flops_g / (chips * PEAK_FLOPS)
+        t_m = bytes_g / (chips * HBM_BW)
+        t_x = cal["coll"] / ICI_BW
+        terms = {"compute": t_c, "memory": t_m, "collective": t_x}
+        from repro.launch.steps import SHAPES
+        sp = SHAPES[shape]
+        mf = model_flops(cfg, rec["kind"], sp.seq_len, sp.global_batch)
+        rec["calibrated"] = {
+            "t_compute_s": t_c, "t_memory_s": t_m, "t_collective_s": t_x,
+            "dominant": max(terms, key=terms.get),
+            "model_flops": mf,
+            "hlo_flops_global": flops_g,
+            "useful_flops_ratio": (mf / flops_g) if flops_g else 0.0,
+            "hbm_bytes_per_device": cal["bytes"],
+            "collective_bytes_per_device": cal["coll"],
+            "unit_layers": cal["unit_layers"],
+            "calib_seconds": round(time.perf_counter() - t0, 1),
+        }
+        c = rec["calibrated"]
+        print(f"OK {arch:18s} {shape:12s} comp={t_c:9.4f}s mem={t_m:9.4f}s "
+              f"coll={t_x:9.5f}s dom={c['dominant'][:6]} "
+              f"useful={c['useful_flops_ratio']:.3f} "
+              f"({c['calib_seconds']}s)", flush=True)
+        out.append(rec)
+
+    with open(args.out, "w") as f:
+        json.dump({"records": out}, f, indent=1)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

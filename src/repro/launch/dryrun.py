@@ -1,0 +1,155 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST precede every other import (jax locks device count on first init).
+"""Multi-pod dry-run: lower + compile every (arch × input-shape × mesh).
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch qwen2-0.5b \
+        --shape decode_32k [--multi-pod] [--out results.json]
+
+Succeeding here proves the distribution config is coherent: shardings are
+accepted, the collectives lower, and compilation fits.  The compiled
+artifact's ``memory_analysis()`` / ``cost_analysis()`` plus the HLO
+collective parse feed EXPERIMENTS.md §Dry-run and §Roofline.
+"""
+import argparse
+import json
+import sys
+import time
+from typing import Any, Dict, Optional
+
+import jax
+
+from repro.configs import ALL_ARCHS, get_config
+from repro.launch import sharding as sh
+from repro.launch.mesh import make_production_mesh
+from repro.launch.steps import SHAPES, step_and_specs
+from repro.roofline.analysis import (collective_bytes_from_hlo,
+                                     extract_cost, extract_memory,
+                                     roofline_report)
+
+
+def lower_one(arch: str, shape_name: str, *, multi_pod: bool = False,
+              compile_: bool = True, shard_blocks: bool = True,
+              remat: bool = True, verbose: bool = True,
+              moe_ep: bool = False, donate_state: bool = False,
+              zero_data: bool = False, cp_decode: bool = False
+              ) -> Dict[str, Any]:
+    """Lower+compile one (arch, shape, mesh) and return the dry-run record.
+
+    moe_ep / donate_state are the §Perf optimization variants (baseline is
+    the paper-faithful GSPMD lowering)."""
+    cfg = get_config(arch)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_chips = mesh.devices.size
+    from repro.models import attention as attn_mod
+    from repro.models import ffn as ffn_mod
+    dp = ("pod", "data") if multi_pod else ("data",)
+    if moe_ep:
+        ffn_mod.EP_AXES = (dp, "model")
+        ffn_mod.EP_MESH = mesh
+    else:
+        ffn_mod.EP_AXES = None
+        ffn_mod.EP_MESH = None
+    if cp_decode:
+        attn_mod.CP_AXES = (dp, "model")
+        attn_mod.CP_MESH = mesh
+    else:
+        attn_mod.CP_AXES = None
+        attn_mod.CP_MESH = None
+    fn, args, kind = step_and_specs(cfg, shape_name, remat=remat)
+
+    # shardings per argument pytree
+    if kind == "train":
+        params_s, opt_s, batch_s = (
+            sh.param_shardings(args[0], mesh, zero_data=zero_data),
+            sh.opt_shardings(args[1], mesh, zero_data=zero_data),
+            sh.batch_shardings(args[2], mesh))
+        in_shardings = (params_s, opt_s, batch_s)
+        out_shardings = (params_s, opt_s, None)
+    elif kind == "prefill":
+        params_s = sh.param_shardings(args[0], mesh, zero_data=zero_data)
+        batch_s = sh.batch_shardings(args[1], mesh)
+        in_shardings = (params_s, batch_s)
+        out_shardings = None
+    else:
+        params_s = sh.param_shardings(args[0], mesh, zero_data=zero_data)
+        tok_s = sh.tokens_sharding(args[1].shape[0], mesh)
+        state_s = sh.state_shardings(args[2], mesh, shard_blocks=shard_blocks)
+        in_shardings = (params_s, tok_s, state_s)
+        out_shardings = (None, state_s)
+
+    rec: Dict[str, Any] = {
+        "arch": arch, "shape": shape_name, "kind": kind,
+        "mesh": "2x16x16" if multi_pod else "16x16", "chips": int(n_chips),
+    }
+    rec["variant"] = (("ep" if moe_ep else "")
+                      + ("+cp" if cp_decode else "")
+                      + ("+donate" if donate_state else "")
+                      + ("+zero" if zero_data else "")) or "baseline"
+    t0 = time.perf_counter()
+    with mesh:
+        donate = (2,) if (donate_state and kind == "decode") else ()
+        jitted = jax.jit(fn, in_shardings=in_shardings,
+                         out_shardings=out_shardings,
+                         donate_argnums=donate)
+        lowered = jitted.lower(*args)
+        rec["lower_s"] = round(time.perf_counter() - t0, 2)
+        if not compile_:
+            return rec
+        t1 = time.perf_counter()
+        compiled = lowered.compile()
+        rec["compile_s"] = round(time.perf_counter() - t1, 2)
+
+    rec["memory"] = extract_memory(compiled)
+    rec["cost"] = extract_cost(compiled)
+    hlo = compiled.as_text()
+    rec["collectives"] = collective_bytes_from_hlo(hlo)
+    rec["roofline"] = roofline_report(cfg, rec, n_chips)
+    if verbose:
+        print(compiled.memory_analysis())
+        print({k: v for k, v in rec["cost"].items()})
+        print(json.dumps(rec["roofline"], indent=2))
+    return rec
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all",
+                    help=f"one of {ALL_ARCHS} or 'all'")
+    ap.add_argument("--shape", default="all",
+                    help=f"one of {list(SHAPES)} or 'all'")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--no-shard-blocks", action="store_true",
+                    help="replicate KV pool block axis (ablation)")
+    ap.add_argument("--no-remat", action="store_true")
+    ap.add_argument("--lower-only", action="store_true")
+    ap.add_argument("--out", default="")
+    args = ap.parse_args(argv)
+
+    archs = ALL_ARCHS[:10] if args.arch == "all" else [args.arch]
+    shapes = list(SHAPES) if args.shape == "all" else [args.shape]
+    records, failures = [], []
+    for arch in archs:
+        for shape in shapes:
+            tag = f"{arch} x {shape} x {'2x16x16' if args.multi_pod else '16x16'}"
+            print(f"=== {tag} ===", flush=True)
+            try:
+                rec = lower_one(arch, shape, multi_pod=args.multi_pod,
+                                compile_=not args.lower_only,
+                                shard_blocks=not args.no_shard_blocks,
+                                remat=not args.no_remat)
+                records.append(rec)
+                print(f"OK  {tag} lower={rec.get('lower_s')}s "
+                      f"compile={rec.get('compile_s')}s", flush=True)
+            except Exception as e:  # noqa: BLE001 — report and continue
+                failures.append({"tag": tag, "error": f"{type(e).__name__}: {e}"})
+                print(f"FAIL {tag}: {type(e).__name__}: {e}", flush=True)
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump({"records": records, "failures": failures}, f, indent=1)
+    print(f"\n{len(records)} ok, {len(failures)} failed")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

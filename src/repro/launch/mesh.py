@@ -1,0 +1,34 @@
+"""Production mesh construction (multi-pod dry-run §e).
+
+Defined as FUNCTIONS so importing this module never touches jax device
+state; ``dryrun.py`` sets XLA_FLAGS before any jax import to get 512
+placeholder host devices.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """Single-pod (16, 16) = 256 chips; multi-pod (2, 16, 16) = 512."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_local_mesh(model_axis: int = 1):
+    """Whatever this process actually has (tests / examples on CPU)."""
+    n = len(jax.devices())
+    data = n // model_axis
+    return jax.make_mesh((data, model_axis), ("data", "model"))
+
+
+def dp_axes(mesh) -> Tuple[str, ...]:
+    """The pure-data-parallel axes of a mesh ('pod' is data-parallel)."""
+    return tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+
+
+def model_axis(mesh) -> str:
+    return "model" if "model" in mesh.axis_names else mesh.axis_names[-1]

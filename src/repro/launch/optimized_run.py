@@ -1,0 +1,58 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST precede every other import (jax locks device count on first init).
+"""Dry-run sweep of the OPTIMIZED (§Perf) configuration — expert-parallel
+MoE + context-parallel decode + ZeRO param sharding + state donation —
+proving the beyond-paper distribution also lowers+compiles for every
+(arch × shape), single- and multi-pod.
+
+    PYTHONPATH=src python -m repro.launch.optimized_run --out results/optimized.json
+"""
+import argparse
+import json
+import sys
+
+from repro.configs import ALL_ARCHS
+from repro.launch.dryrun import lower_one
+from repro.launch.steps import SHAPES
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--out", default="")
+    args = ap.parse_args(argv)
+
+    archs = ALL_ARCHS[:10] if args.arch == "all" else [args.arch]
+    shapes = list(SHAPES) if args.shape == "all" else [args.shape]
+    records, failures = [], []
+    for arch in archs:
+        for shape in shapes:
+            kind = SHAPES[shape].kind
+            tag = f"{arch} x {shape}"
+            try:
+                rec = lower_one(
+                    arch, shape, multi_pod=args.multi_pod,
+                    moe_ep=True, cp_decode=(kind == "decode"),
+                    donate_state=(kind == "decode"), zero_data=True,
+                    verbose=False)
+                records.append(rec)
+                m = rec["memory"]
+                print(f"OK  {tag:40s} variant={rec['variant']:18s} "
+                      f"arg={m['argument_size_in_bytes']/1e9:7.1f}GB "
+                      f"coll={rec['collectives']['bytes_per_device']/1e6:9.1f}MB "
+                      f"compile={rec['compile_s']}s", flush=True)
+            except Exception as e:  # noqa: BLE001
+                failures.append({"tag": tag, "error": f"{type(e).__name__}: {e}"})
+                print(f"FAIL {tag}: {type(e).__name__}: {e}", flush=True)
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump({"records": records, "failures": failures}, f, indent=1)
+    print(f"\n{len(records)} ok, {len(failures)} failed")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

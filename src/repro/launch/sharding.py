@@ -1,0 +1,255 @@
+"""Sharding rules: params / batches / decode state -> NamedSharding pytrees.
+
+Baseline layout (paper-faithful adaptation, DESIGN §5):
+
+  * params — tensor parallel on the ``model`` axis: column-parallel in
+    projections (wq/wk/wv, FFN up/gate), row-parallel out projections
+    (wo, FFN down).  Expert weights are EXPERT-parallel (leading E axis on
+    ``model``).  Vocab (embed/lm_head) sharded on ``model``.
+  * batch — data parallel over ('pod', 'data').
+  * decode KV pools — batch over data axes, BLOCK axis over ``model``
+    (context-sharded pool; the DSA gather over a block-sharded pool is the
+    central distribution question the §Perf log studies).
+
+Every rule degrades to replication when a dim is not divisible by the axis
+size — e.g. GQA kv=8 heads on a 16-way model axis — so ``.lower()`` always
+succeeds for every assigned architecture.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models.common import ModelConfig
+
+# weight-name classes -------------------------------------------------------
+
+_COL_PARALLEL = {  # 2D (in, out): shard OUT dim
+    "wq", "wk", "wv", "w_uq", "w_uk", "w_uv", "w_dq", "w_dkv",
+    "w_gate", "w_up", "x_proj", "in_proj", "cw_k",
+    "w_r", "w_k", "w_v", "w_g", "decay_A", "dt_proj",
+}
+_ROW_PARALLEL = {  # 2D (in, out): shard IN dim
+    "wo", "w_down", "out_proj", "cw_v", "w_o", "decay_B", "cw_r",
+}
+_REPLICATED = {
+    "router", "conv_w", "conv_b", "dt_bias", "A_log", "D", "bonus_u",
+    "q_norm", "kv_norm", "w_kr", "bq", "bk", "bv",
+}
+
+
+def _axis_size(mesh: Mesh, name: str) -> int:
+    return mesh.shape[name] if name in mesh.axis_names else 1
+
+
+def _div(dim: int, mesh: Mesh, axis: str) -> bool:
+    n = _axis_size(mesh, axis)
+    return n > 1 and dim % n == 0
+
+
+def dp_spec(mesh: Mesh, dim: int):
+    """Longest prefix of data-parallel axes that divides `dim`."""
+    axes = [a for a in ("pod", "data") if a in mesh.axis_names]
+    # try full product first, then just 'data', else replicate
+    for cand in (tuple(axes), ("data",) if "data" in axes else ()):
+        if not cand:
+            continue
+        n = 1
+        for a in cand:
+            n *= mesh.shape[a]
+        if dim % n == 0:
+            return cand if len(cand) > 1 else cand[0]
+    return None
+
+
+# ---------------------------------------------------------------------------
+# Params
+# ---------------------------------------------------------------------------
+
+def _is_stacked_layer_leaf(path: Tuple) -> bool:
+    """True when the leaf lives under stacked layers (leading L axis):
+    path ...DictKey('layers') followed by another DictKey (not an index)."""
+    for i, p in enumerate(path[:-1]):
+        if getattr(p, "key", None) == "layers":
+            nxt = path[i + 1]
+            return hasattr(nxt, "key")
+    return False
+
+
+def _param_spec(path: Tuple, shape: Tuple[int, ...], mesh: Mesh) -> P:
+    if _is_stacked_layer_leaf(path) and len(shape) >= 1:
+        inner = _param_spec_base(path, tuple(shape[1:]), mesh)
+        return P(None, *inner)
+    return _param_spec_base(path, shape, mesh)
+
+
+def _param_spec_base(path: Tuple, shape: Tuple[int, ...], mesh: Mesh) -> P:
+    name = None
+    for p in reversed(path):
+        if hasattr(p, "key"):
+            name = str(p.key)
+            break
+    m = "model"
+    if name in ("embed",):
+        return P(m, None) if _div(shape[0], mesh, m) else P()
+    if name in ("lm_head",):
+        return P(None, m) if _div(shape[1], mesh, m) else P()
+    if name in _REPLICATED or len(shape) <= 1:
+        return P(*([None] * len(shape)))
+    if len(shape) == 3:               # expert weights (E, a, b)
+        if _div(shape[0], mesh, m):
+            return P(m, None, None)   # expert parallel
+        if _div(shape[2], mesh, m):
+            return P(None, None, m)
+        return P(None, None, None)
+    if len(shape) == 2:
+        if name in _COL_PARALLEL and _div(shape[1], mesh, m):
+            return P(None, m)
+        if name in _ROW_PARALLEL and _div(shape[0], mesh, m):
+            return P(m, None)
+        # unknown 2D weight: shard the bigger divisible dim
+        if shape[1] >= shape[0] and _div(shape[1], mesh, m):
+            return P(None, m)
+        if _div(shape[0], mesh, m):
+            return P(m, None)
+        return P(None, None)
+    return P(*([None] * len(shape)))
+
+
+def _add_zero_axis(spec: P, shape: Tuple[int, ...], mesh: Mesh) -> P:
+    """ZeRO-style extra sharding: also shard the largest still-unsharded
+    divisible dim over 'data' (GSPMD all-gathers per use — ZeRO-3)."""
+    if "data" not in mesh.axis_names or len(shape) < 2:
+        return spec
+    entries = list(spec) + [None] * (len(shape) - len(spec))
+    cand = [(shape[i], i) for i, e in enumerate(entries)
+            if e is None and _div(shape[i], mesh, "data")]
+    if not cand:
+        return spec
+    _, i = max(cand)
+    entries[i] = "data"
+    return P(*entries)
+
+
+def param_shardings(params_shape: Any, mesh: Mesh,
+                    zero_data: bool = False) -> Any:
+    """NamedSharding pytree matching the params (shape) pytree.
+
+    zero_data=True additionally shards every weight over the 'data' axis
+    (ZeRO-3: parameters/optimizer state fully sharded; all-gathered per
+    layer during compute)."""
+    leaves, treedef = jax.tree_util.tree_flatten_with_path(params_shape)
+    out = []
+    for path, leaf in leaves:
+        spec = _param_spec(path, leaf.shape, mesh)
+        if zero_data:
+            spec = _add_zero_axis(spec, leaf.shape, mesh)
+        out.append(NamedSharding(mesh, spec))
+    return jax.tree_util.tree_unflatten(
+        jax.tree_util.tree_structure(params_shape), out)
+
+
+def opt_shardings(opt_shape: Any, mesh: Mesh, zero_data: bool = False) -> Any:
+    """Optimizer state mirrors param sharding ('m'/'v' subtrees)."""
+    def spec_for(path, leaf):
+        # strip the leading 'm'/'v' key so the param rules apply
+        sub = path[1:] if path and str(getattr(path[0], "key", "")) in (
+            "m", "v") else path
+        if not sub and leaf.ndim == 0:     # step counter
+            return NamedSharding(mesh, P())
+        spec = _param_spec(sub, leaf.shape, mesh)
+        if zero_data:
+            spec = _add_zero_axis(spec, leaf.shape, mesh)
+        return NamedSharding(mesh, spec)
+    leaves, _ = jax.tree_util.tree_flatten_with_path(opt_shape)
+    out = [spec_for(path, leaf) for path, leaf in leaves]
+    return jax.tree_util.tree_unflatten(
+        jax.tree_util.tree_structure(opt_shape), out)
+
+
+# ---------------------------------------------------------------------------
+# Batches (train / prefill inputs)
+# ---------------------------------------------------------------------------
+
+def batch_shardings(batch_shape: Dict[str, Any], mesh: Mesh) -> Dict[str, Any]:
+    out = {}
+    for k, v in batch_shape.items():
+        dp = dp_spec(mesh, v.shape[0])
+        spec = [dp] + [None] * (len(v.shape) - 1)
+        out[k] = NamedSharding(mesh, P(*spec))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Decode state
+# ---------------------------------------------------------------------------
+
+def _is_stacked_cache_leaf(path: Tuple) -> bool:
+    for i, p in enumerate(path[:-1]):
+        if getattr(p, "key", None) == "caches":
+            nxt = path[i + 1]
+            return hasattr(nxt, "key")
+    return False
+
+
+def _state_spec(path: Tuple, shape: Tuple[int, ...], mesh: Mesh,
+                *, shard_blocks: bool = True) -> P:
+    if _is_stacked_cache_leaf(path) and len(shape) >= 1:
+        inner = _state_spec_base(path, tuple(shape[1:]), mesh,
+                                 shard_blocks=shard_blocks)
+        return P(None, *inner)
+    return _state_spec_base(path, shape, mesh, shard_blocks=shard_blocks)
+
+
+def _state_spec_base(path: Tuple, shape: Tuple[int, ...], mesh: Mesh,
+                     *, shard_blocks: bool = True) -> P:
+    name = None
+    for p in reversed(path):
+        if hasattr(p, "key"):
+            name = str(p.key)
+            break
+    m = "model"
+    B = shape[0] if shape else 1
+    dp = dp_spec(mesh, B) if shape else None
+    if name == "cur_len":
+        return P(dp)
+    if name in ("k", "v") and len(shape) == 5:
+        # (B, Hkv, NB, bs, D): batch over dp, blocks over model
+        nb_ok = shard_blocks and _div(shape[2], mesh, m)
+        return P(dp, None, m if nb_ok else None, None, None)
+    if name == "meta":
+        nb_ok = shard_blocks and _div(shape[2], mesh, m)
+        spec = [dp, None, m if nb_ok else None] + [None] * (len(shape) - 3)
+        return P(*spec)
+    if name == "conv" and len(shape) == 3:      # (B, dc-1, di)
+        return P(dp, None, m if _div(shape[2], mesh, m) else None)
+    if name == "ssm" and len(shape) == 3:       # (B, di, ds)
+        return P(dp, m if _div(shape[1], mesh, m) else None, None)
+    if name == "S" and len(shape) == 4:         # (B, H, hd, hd)
+        return P(dp, m if _div(shape[1], mesh, m) else None, None, None)
+    if name in ("shift_t", "shift_c") and len(shape) == 2:
+        return P(dp, m if _div(shape[1], mesh, m) else None)
+    if name == "enc_kvs" and len(shape) == 5:    # stacked (L, B, S, Hkv, hd)
+        dp5 = dp_spec(mesh, shape[1])
+        return P(None, dp5, None, m if _div(shape[3], mesh, m) else None,
+                 None)
+    if len(shape) == 4:                          # enc_kvs (B, S, Hkv, hd)
+        return P(dp, None, m if _div(shape[2], mesh, m) else None, None)
+    return P(*([dp] + [None] * (len(shape) - 1))) if shape else P()
+
+
+def state_shardings(state_shape: Any, mesh: Mesh,
+                    *, shard_blocks: bool = True) -> Any:
+    leaves, _ = jax.tree_util.tree_flatten_with_path(state_shape)
+    out = [NamedSharding(mesh, _state_spec(path, leaf.shape, mesh,
+                                           shard_blocks=shard_blocks))
+           for path, leaf in leaves]
+    return jax.tree_util.tree_unflatten(
+        jax.tree_util.tree_structure(state_shape), out)
+
+
+def tokens_sharding(batch: int, mesh: Mesh) -> NamedSharding:
+    return NamedSharding(mesh, P(dp_spec(mesh, batch)))

@@ -1,0 +1,175 @@
+"""Step functions + abstract input specs for every (arch × input shape).
+
+The four assigned input shapes:
+
+    train_4k      seq=4,096    global_batch=256   -> train_step
+    prefill_32k   seq=32,768   global_batch=32    -> prefill_step
+    decode_32k    seq=32,768   global_batch=128   -> serve_step (1 new token)
+    long_500k     seq=524,288  global_batch=1     -> serve_step (1 new token)
+
+All specs are ShapeDtypeStructs (no allocation) — the multi-pod dry-run
+lowers + compiles each (arch, shape, mesh) from these.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import model as M
+from repro.models.common import ModelConfig
+from repro.training.optimizer import AdamWConfig, adamw_update, init_opt_state
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str            # "train" | "prefill" | "decode"
+
+
+SHAPES: Dict[str, ShapeSpec] = {
+    "train_4k": ShapeSpec("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeSpec("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeSpec("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeSpec("long_500k", 524288, 1, "decode"),
+}
+
+PARAM_DTYPE = jnp.bfloat16
+CACHE_DTYPE = jnp.bfloat16
+
+
+def sds(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+# ---------------------------------------------------------------------------
+# Abstract params / optimizer / decode-state
+# ---------------------------------------------------------------------------
+
+def abstract_params(cfg: ModelConfig, dtype=PARAM_DTYPE,
+                    stacked: Optional[bool] = None):
+    return jax.eval_shape(
+        lambda: M.init_params(cfg, jax.random.PRNGKey(0), dtype,
+                              stacked=stacked))
+
+
+def abstract_opt_state(params_shape):
+    return jax.eval_shape(init_opt_state, params_shape)
+
+
+def _enc_kv_shapes(cfg: ModelConfig, batch: int, stacked: bool = True):
+    hkv, hd = cfg.num_kv_heads, cfg.head_dim
+    if stacked:                    # stacked (L, B, S_enc, Hkv, hd)
+        sh = (cfg.num_layers, batch, cfg.encoder_seq_len, hkv, hd)
+        return (sds(sh, PARAM_DTYPE), sds(sh, PARAM_DTYPE))
+    return [(sds((batch, cfg.encoder_seq_len, hkv, hd), PARAM_DTYPE),
+             sds((batch, cfg.encoder_seq_len, hkv, hd), PARAM_DTYPE))
+            for _ in range(cfg.num_layers)]
+
+
+def abstract_decode_state(cfg: ModelConfig, batch: int, seq_len: int,
+                          stacked: Optional[bool] = None):
+    num_blocks = -(-seq_len // cfg.dsa.block_size)
+    enc = None
+    if cfg.is_encoder_decoder:
+        enc = _enc_kv_shapes(
+            cfg, batch,
+            stacked=M.is_homogeneous(cfg) if stacked is None else stacked)
+    return jax.eval_shape(
+        lambda: M.init_decode_state(cfg, batch, num_blocks, CACHE_DTYPE,
+                                    enc_kvs=enc, stacked=stacked))
+
+
+# ---------------------------------------------------------------------------
+# input_specs: ShapeDtypeStruct stand-ins for every model input
+# ---------------------------------------------------------------------------
+
+def input_specs(cfg: ModelConfig, shape_name: str) -> Dict[str, Any]:
+    """Returns the kwargs pytree the step function is lowered with."""
+    sp = SHAPES[shape_name]
+    B, S = sp.global_batch, sp.seq_len
+    if sp.kind == "train":
+        text = S - (cfg.num_patches if cfg.frontend == "vit_patch_stub" else 0)
+        batch = {"tokens": sds((B, text), jnp.int32),
+                 "labels": sds((B, text), jnp.int32)}
+        if cfg.is_encoder_decoder:
+            batch["frames"] = sds((B, cfg.encoder_seq_len, cfg.d_model),
+                                  PARAM_DTYPE)
+        if cfg.frontend == "vit_patch_stub":
+            batch["patch_embeds"] = sds((B, cfg.num_patches, cfg.d_model),
+                                        PARAM_DTYPE)
+        return {"batch": batch}
+    if sp.kind == "prefill":
+        text = S - (cfg.num_patches if cfg.frontend == "vit_patch_stub" else 0)
+        inputs = {"tokens": sds((B, text), jnp.int32)}
+        if cfg.is_encoder_decoder:
+            inputs["frames"] = sds((B, cfg.encoder_seq_len, cfg.d_model),
+                                   PARAM_DTYPE)
+        if cfg.frontend == "vit_patch_stub":
+            inputs["patch_embeds"] = sds((B, cfg.num_patches, cfg.d_model),
+                                         PARAM_DTYPE)
+        return {"inputs": inputs}
+    # decode: one new token against a seq_len KV cache
+    return {"tokens": sds((B,), jnp.int32),
+            "state": abstract_decode_state(cfg, B, S)}
+
+
+# ---------------------------------------------------------------------------
+# Step builders
+# ---------------------------------------------------------------------------
+
+def make_train_step(cfg: ModelConfig,
+                    opt_cfg: AdamWConfig = AdamWConfig(),
+                    remat: bool = True) -> Callable:
+    def train_step(params, opt_state, batch):
+        def loss_fn(p):
+            loss, _ = M.forward_train(p, cfg, batch, remat=remat)
+            return loss
+        loss, grads = jax.value_and_grad(loss_fn)(params)
+        params2, opt2, metrics = adamw_update(opt_cfg, params, grads,
+                                              opt_state)
+        return params2, opt2, {"loss": loss, **metrics}
+    return train_step
+
+
+def make_prefill_step(cfg: ModelConfig, seq_len: int) -> Callable:
+    num_blocks = -(-seq_len // cfg.dsa.block_size)
+
+    def prefill_step(params, inputs):
+        logits, state = M.prefill(params, cfg, inputs, num_blocks,
+                                  cache_dtype=CACHE_DTYPE)
+        return logits, state
+    return prefill_step
+
+
+def make_serve_step(cfg: ModelConfig, attn_impl: str = "ref") -> Callable:
+    def serve_step(params, tokens, state):
+        logits, new_state = M.decode_step(params, cfg, tokens, state,
+                                          attn_impl=attn_impl)
+        return logits, new_state
+    return serve_step
+
+
+def step_and_specs(cfg: ModelConfig, shape_name: str, *, remat: bool = True,
+                   stacked: Optional[bool] = None
+                   ) -> Tuple[Callable, Tuple, str]:
+    """Returns (fn, ordered_args_specs, kind) for lowering."""
+    sp = SHAPES[shape_name]
+    specs = input_specs(cfg, shape_name)
+    params = abstract_params(cfg, stacked=stacked)
+    if sp.kind == "train":
+        fn = make_train_step(cfg, remat=remat)
+        opt = abstract_opt_state(params)
+        return fn, (params, opt, specs["batch"]), "train"
+    if sp.kind == "prefill":
+        fn = make_prefill_step(cfg, sp.seq_len)
+        return fn, (params, specs["inputs"]), "prefill"
+    fn = make_serve_step(cfg)
+    state = abstract_decode_state(cfg, sp.global_batch, sp.seq_len,
+                                  stacked=stacked)
+    return fn, (params, specs["tokens"], state), "decode"

@@ -1,0 +1,637 @@
+"""Attention modules: GQA (MHA/MQA as special cases) and MLA.
+
+Three execution paths per flavour:
+
+* ``*_train``   — full causal self-attention over a sequence (training and
+  plain/layer-segmented prefill).  Uses memory-bounded blocked ("flash
+  style") attention in pure jnp; the Pallas ``flash_prefill`` kernel mirrors
+  the inner loop for TPU.
+* ``*_decode_step`` — one new token against the paged KV pool with DSA
+  block selection (SparseServe decode path).
+* ``cross_attention`` — Whisper decoder cross-attention over cached encoder
+  keys/values.
+
+KV pool layout is the paper's head-major (H, N, D): ``(B, Hkv, NB, bs, D)``
+so per-head block selection touches contiguous memory (§3.2, Fig. 5).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import dsa
+from repro.models.common import (DSAConfig, MLAConfig, ModelConfig, apply_rope,
+                                 dense_init, rms_norm, split_keys)
+
+NEG_INF = -1e30
+
+# Cost-calibration mode (roofline/calibrate.py): forces single-trip scans in
+# blocked attention so XLA's cost analysis (which counts while-loop bodies
+# ONCE, not x trip-count) reports exact FLOPs.  Never used on real runs.
+EXACT_COST_MODE = False
+
+# Context-parallel decode (shard_map) — §Perf optimization.  Baseline GSPMD
+# all-gathers the block-sharded KV pool for the DSA gather (GBs per step);
+# the CP path keeps pool blocks on their shard: only the (small) block
+# SCORES are all-gathered, the global top-k is computed redundantly per
+# shard, each shard attends over its LOCAL selected blocks, and partials
+# merge with a logsumexp psum.  Set by the launcher; None -> GSPMD path.
+CP_AXES = None       # ((dp axes...), model_axis)
+CP_MESH = None
+
+
+# ---------------------------------------------------------------------------
+# Parameter init
+# ---------------------------------------------------------------------------
+
+def init_gqa_params(cfg: ModelConfig, key: jax.Array, dtype,
+                    cross: bool = False) -> Dict[str, jax.Array]:
+    d, Hq, Hkv, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    ks = split_keys(key, 4)
+    p = {
+        "wq": dense_init(ks[0], (d, Hq * hd), dtype),
+        "wk": dense_init(ks[1], (d, Hkv * hd), dtype),
+        "wv": dense_init(ks[2], (d, Hkv * hd), dtype),
+        "wo": dense_init(ks[3], (Hq * hd, d), dtype),
+    }
+    if cfg.qkv_bias and not cross:
+        p["bq"] = jnp.zeros((Hq * hd,), dtype)
+        p["bk"] = jnp.zeros((Hkv * hd,), dtype)
+        p["bv"] = jnp.zeros((Hkv * hd,), dtype)
+    return p
+
+
+def init_mla_params(cfg: ModelConfig, key: jax.Array, dtype) -> Dict[str, jax.Array]:
+    m = cfg.mla
+    d, H = cfg.d_model, cfg.num_heads
+    ks = split_keys(key, 8)
+    return {
+        "w_dq": dense_init(ks[0], (d, m.q_lora_rank), dtype),
+        "q_norm": jnp.ones((m.q_lora_rank,), dtype),
+        "w_uq": dense_init(ks[1], (m.q_lora_rank,
+                                   H * (m.qk_nope_head_dim + m.qk_rope_head_dim)), dtype),
+        "w_dkv": dense_init(ks[2], (d, m.kv_lora_rank), dtype),
+        "kv_norm": jnp.ones((m.kv_lora_rank,), dtype),
+        "w_kr": dense_init(ks[3], (d, m.qk_rope_head_dim), dtype),
+        "w_uk": dense_init(ks[4], (m.kv_lora_rank, H * m.qk_nope_head_dim), dtype),
+        "w_uv": dense_init(ks[5], (m.kv_lora_rank, H * m.v_head_dim), dtype),
+        "wo": dense_init(ks[6], (H * m.v_head_dim, d), dtype),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Blocked ("flash-style") causal attention — memory bounded, pure jnp
+# ---------------------------------------------------------------------------
+
+def flash_attention_jnp(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                        scale: float, causal: bool = True, q_offset=0,
+                        q_chunk: int = 512, k_chunk: int = 512,
+                        triangular: bool = False) -> jax.Array:
+    """Online-softmax blocked attention.
+
+    q: (B, Sq, Hq, D);  k/v: (B, Sk, Hkv, Dk/Dv).  GQA via head grouping.
+    q_offset: absolute position of q[0] (chunked prefill continuation).
+    triangular: skip fully-masked key chunks (halves causal FLOPs;
+        §Perf optimization — unrolls the q-chunk loop in Python).
+    Returns (B, Sq, Hq, Dv).
+    """
+    B, Sq, Hq, D = q.shape
+    _, Sk, Hkv, Dk = k.shape
+    Dv = v.shape[-1]
+    G = Hq // Hkv
+    if EXACT_COST_MODE:          # single-trip scans -> exact XLA flop count
+        q_chunk, k_chunk = Sq, Sk
+    q_chunk = min(q_chunk, Sq)
+    k_chunk = min(k_chunk, Sk)
+    # pad to multiples
+    pq = (-Sq) % q_chunk
+    pk = (-Sk) % k_chunk
+    if pq:
+        q = jnp.pad(q, ((0, 0), (0, pq), (0, 0), (0, 0)))
+    if pk:
+        k = jnp.pad(k, ((0, 0), (0, pk), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pk), (0, 0), (0, 0)))
+    nq = (Sq + pq) // q_chunk
+    nk = (Sk + pk) // k_chunk
+    qr = q.reshape(B, nq, q_chunk, Hkv, G, D)
+    kr = k.reshape(B, nk, k_chunk, Hkv, Dk)
+    vr = v.reshape(B, nk, k_chunk, Hkv, Dv)
+    kpos = jnp.arange(Sk + pk).reshape(nk, k_chunk)
+    k_valid = (kpos < Sk)
+
+    def one_q_chunk(iq, q_i, n_kv):
+        # q_i: (B, q_chunk, Hkv, G, D)
+        qpos = q_offset + iq * q_chunk + jnp.arange(q_chunk)
+
+        def body(carry, j):
+            m, l, acc = carry
+            k_j = jax.lax.dynamic_index_in_dim(kr, j, axis=1, keepdims=False)
+            v_j = jax.lax.dynamic_index_in_dim(vr, j, axis=1, keepdims=False)
+            s = jnp.einsum("bqhgd,bkhd->bhgqk", q_i.astype(jnp.float32),
+                           k_j.astype(jnp.float32)) * scale
+            kp = j * k_chunk + jnp.arange(k_chunk)
+            mask = k_valid[j][None, :] if not causal else (
+                (qpos[:, None] >= kp[None, :]) & k_valid[j][None, :])
+            s = jnp.where(mask[None, None, None], s, NEG_INF)
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + jnp.sum(p, axis=-1)
+            acc_new = acc * corr[..., None] + jnp.einsum(
+                "bhgqk,bkhd->bhgqd", p, v_j.astype(jnp.float32))
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((B, Hkv, G, q_chunk), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, Hkv, G, q_chunk), jnp.float32)
+        a0 = jnp.zeros((B, Hkv, G, q_chunk, Dv), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(body, (m0, l0, a0),
+                                      jnp.arange(n_kv, dtype=jnp.int32))
+        o = acc / jnp.maximum(l[..., None], 1e-30)
+        # (B,Hkv,G,q_chunk,Dv) -> (B, q_chunk, Hkv, G, Dv)
+        return jnp.transpose(o, (0, 3, 1, 2, 4))
+
+    if triangular and causal:
+        # python loop: static per-chunk kv bound -> no masked-out compute
+        outs = []
+        for iq in range(nq):
+            q_i = qr[:, iq]
+            hi = min(nk, (q_offset + (iq + 1) * q_chunk + k_chunk - 1) // k_chunk)
+            outs.append(one_q_chunk(iq, q_i, max(hi, 1)))
+        o = jnp.stack(outs, axis=1)
+    else:
+        o = jax.vmap(lambda iq, q_i: one_q_chunk(iq, q_i, nk),
+                     in_axes=(0, 1), out_axes=1)(
+            jnp.arange(nq, dtype=jnp.int32), qr)
+    o = o.reshape(B, nq * q_chunk, Hq, Dv)[:, :Sq]
+    return o.astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# GQA: train / prefill path
+# ---------------------------------------------------------------------------
+
+def gqa_project_qkv(p: Dict[str, jax.Array], cfg: ModelConfig, x: jax.Array,
+                    positions: jax.Array):
+    """x: (B, S, d) -> q (B,S,Hq,hd), k/v (B,S,Hkv,hd) with RoPE applied."""
+    B, S, _ = x.shape
+    Hq, Hkv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    q = x @ p["wq"]
+    k = x @ p["wk"]
+    v = x @ p["wv"]
+    if "bq" in p:
+        q = q + p["bq"]
+        k = k + p["bk"]
+        v = v + p["bv"]
+    q = q.reshape(B, S, Hq, hd)
+    k = k.reshape(B, S, Hkv, hd)
+    v = v.reshape(B, S, Hkv, hd)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def gqa_self_attention(p: Dict[str, jax.Array], cfg: ModelConfig, x: jax.Array,
+                       positions: jax.Array, *,
+                       k_ctx: Optional[jax.Array] = None,
+                       v_ctx: Optional[jax.Array] = None,
+                       causal: bool = True, q_offset=0,
+                       triangular: bool = False,
+                       return_kv: bool = False):
+    """Full (train / prefill) self-attention.  Optional dense context
+    ``k_ctx/v_ctx`` (B, S_past, Hkv, hd) supports chunked prefill."""
+    q, k, v = gqa_project_qkv(p, cfg, x, positions)
+    if k_ctx is not None:
+        k_all = jnp.concatenate([k_ctx, k], axis=1)
+        v_all = jnp.concatenate([v_ctx, v], axis=1)
+    else:
+        k_all, v_all = k, v
+    scale = 1.0 / (cfg.head_dim ** 0.5)
+    o = flash_attention_jnp(q, k_all, v_all, scale=scale, causal=causal,
+                            q_offset=q_offset, triangular=triangular)
+    B, S = x.shape[:2]
+    out = o.reshape(B, S, -1) @ p["wo"]
+    if return_kv:
+        return out, k, v
+    return out
+
+
+def cross_attention(p: Dict[str, jax.Array], cfg: ModelConfig, x: jax.Array,
+                    k_enc: jax.Array, v_enc: jax.Array):
+    """Whisper decoder cross-attention; k_enc/v_enc: (B, S_enc, Hkv, hd)
+    (already projected + cached once per request)."""
+    B, S, _ = x.shape
+    Hq, hd = cfg.num_heads, cfg.head_dim
+    q = (x @ p["wq"]).reshape(B, S, Hq, hd)
+    scale = 1.0 / (hd ** 0.5)
+    o = flash_attention_jnp(q, k_enc, v_enc, scale=scale, causal=False)
+    return o.reshape(B, S, -1) @ p["wo"]
+
+
+def project_enc_kv(p: Dict[str, jax.Array], cfg: ModelConfig, enc: jax.Array):
+    B, S, _ = enc.shape
+    Hkv, hd = cfg.num_kv_heads, cfg.head_dim
+    k = (enc @ p["wk"]).reshape(B, S, Hkv, hd)
+    v = (enc @ p["wv"]).reshape(B, S, Hkv, hd)
+    return k, v
+
+
+# ---------------------------------------------------------------------------
+# Paged KV pool (decode)
+# ---------------------------------------------------------------------------
+
+def init_layer_kv_pool(cfg: ModelConfig, batch: int, num_blocks: int,
+                       dtype) -> Dict[str, jax.Array]:
+    """Per-layer paged pool + DSA metadata (zeros; filled by prefill/decode)."""
+    bs = cfg.dsa.block_size
+    if cfg.attention_type == "mla":
+        m = cfg.mla
+        lat = m.latent_dim
+        return {
+            # latent cache acts as a single-kv-head pool; k==v==latent
+            "k": jnp.zeros((batch, 1, num_blocks, bs, lat), dtype),
+            "meta": jnp.zeros(dsa.metadata_shape(cfg.dsa, num_blocks, lat,
+                                                 (batch, 1)), jnp.float32),
+        }
+    hd = cfg.head_dim
+    Hkv = cfg.num_kv_heads
+    return {
+        "k": jnp.zeros((batch, Hkv, num_blocks, bs, hd), dtype),
+        "v": jnp.zeros((batch, Hkv, num_blocks, bs, hd), dtype),
+        "meta": jnp.zeros(dsa.metadata_shape(cfg.dsa, num_blocks, hd,
+                                             (batch, Hkv)), jnp.float32),
+    }
+
+
+def _append_to_pool(pool: jax.Array, new: jax.Array, cur_len: jax.Array,
+                    block_size: int) -> jax.Array:
+    """pool: (B, H, NB, bs, D); new: (B, H, D); cur_len: (B,)."""
+    B, H = new.shape[0], new.shape[1]
+    blk = cur_len // block_size
+    slot = cur_len % block_size
+    bidx = jnp.arange(B)[:, None]
+    hidx = jnp.arange(H)[None, :]
+    return pool.at[bidx, hidx, blk[:, None], slot[:, None]].set(
+        new.astype(pool.dtype))
+
+
+def _update_meta(meta: jax.Array, new_k: jax.Array, cur_len: jax.Array,
+                 dsa_cfg: DSAConfig) -> jax.Array:
+    """Incrementally update block metadata for the block receiving new_k.
+
+    meta mean:   (B,H,NB,D);  cuboid: (B,H,NB,2,D).  new_k: (B,H,D)."""
+    B, H, _ = new_k.shape
+    bs = dsa_cfg.block_size
+    blk = cur_len // bs
+    slot = cur_len % bs
+    bidx = jnp.arange(B)[:, None]
+    hidx = jnp.arange(H)[None, :]
+    kf = new_k.astype(jnp.float32)
+    if dsa_cfg.metadata == "mean":
+        old = meta[bidx, hidx, blk[:, None]]              # (B,H,D)
+        cnt = slot[:, None, None].astype(jnp.float32)
+        new_mean = (old * cnt + kf) / (cnt + 1.0)
+        return meta.at[bidx, hidx, blk[:, None]].set(new_mean)
+    old = meta[bidx, hidx, blk[:, None]]                  # (B,H,2,D)
+    fresh = slot[:, None, None] == 0                      # new block starts
+    old_mn = jnp.where(fresh, jnp.inf, old[..., 0, :])
+    old_mx = jnp.where(fresh, -jnp.inf, old[..., 1, :])
+    mn = jnp.minimum(old_mn, kf)
+    mx = jnp.maximum(old_mx, kf)
+    return meta.at[bidx, hidx, blk[:, None]].set(jnp.stack([mn, mx], axis=-2))
+
+
+# ---------------------------------------------------------------------------
+# Context-parallel decode attention (shard_map over the pool's block axis)
+# ---------------------------------------------------------------------------
+
+def _append_masked(pool, new, lblk, slot, mine):
+    """Scatter `new` (B,H,D) into pool at (lblk, slot) only where mine (B,)."""
+    B, H = new.shape[0], new.shape[1]
+    bidx = jnp.arange(B)[:, None]
+    hidx = jnp.arange(H)[None, :]
+    old = pool[bidx, hidx, lblk[:, None], slot[:, None]]         # (B,H,D)
+    val = jnp.where(mine[:, None, None], new.astype(pool.dtype), old)
+    return pool.at[bidx, hidx, lblk[:, None], slot[:, None]].set(val)
+
+
+def _update_meta_masked(meta, new_k, lblk, slot, mine, dsa_cfg):
+    B, H, _ = new_k.shape
+    bidx = jnp.arange(B)[:, None]
+    hidx = jnp.arange(H)[None, :]
+    kf = new_k.astype(jnp.float32)
+    old = meta[bidx, hidx, lblk[:, None]]
+    if dsa_cfg.metadata == "mean":
+        cnt = slot[:, None, None].astype(jnp.float32)
+        upd = (old * cnt + kf) / (cnt + 1.0)
+    else:
+        fresh = slot[:, None, None] == 0
+        old_mn = jnp.where(fresh, jnp.inf, old[..., 0, :])
+        old_mx = jnp.where(fresh, -jnp.inf, old[..., 1, :])
+        upd = jnp.stack([jnp.minimum(old_mn, kf),
+                         jnp.maximum(old_mx, kf)], axis=-2)
+    sel = mine[:, None, None] if dsa_cfg.metadata == "mean" \
+        else mine[:, None, None, None]
+    upd = jnp.where(sel, upd, old)
+    return meta.at[bidx, hidx, lblk[:, None]].set(upd)
+
+
+def _cp_decode_local(cfg: ModelConfig, q, k, v, kpool, vpool, meta, cur_len,
+                     model_axis: str):
+    """Per-shard body: pools hold NB_loc local blocks."""
+    bs = cfg.dsa.block_size
+    NB_loc = kpool.shape[2]
+    shard = jax.lax.axis_index(model_axis)
+    offset = shard * NB_loc
+
+    blk = cur_len // bs
+    slot = cur_len % bs
+    mine = (blk >= offset) & (blk < offset + NB_loc)
+    lblk = jnp.clip(blk - offset, 0, NB_loc - 1)
+    kpool = _append_masked(kpool, k, lblk, slot, mine)
+    vpool = _append_masked(vpool, v, lblk, slot, mine)
+    meta = _update_meta_masked(meta, k, lblk, slot, mine, cfg.dsa)
+    new_len = cur_len + 1
+
+    # local scores -> all-gather the SCORES (tiny), not the pool
+    scores_loc = dsa.score_blocks(q, meta, cfg.dsa.metadata)     # (B,Hkv,NBl)
+    scores = jax.lax.all_gather(scores_loc, model_axis, axis=2, tiled=True)
+    idx, valid = dsa.select_blocks(scores, cfg.dsa, new_len)     # global ids
+    loc_valid = valid & (idx >= offset) & (idx < offset + NB_loc)
+    lidx = jnp.clip(idx - offset, 0, NB_loc - 1)
+    acc, m, l = dsa.sparse_decode_attention_partial(
+        q, kpool, vpool, lidx, loc_valid, new_len, offset)
+    # logsumexp merge across shards
+    m_g = jax.lax.pmax(m, model_axis)
+    corr = jnp.where(jnp.isfinite(m), jnp.exp(m - m_g), 0.0)
+    l_g = jax.lax.psum(l * corr, model_axis)
+    acc_g = jax.lax.psum(acc * corr[..., None], model_axis)
+    o = (acc_g / jnp.maximum(l_g, 1e-30)[..., None]).astype(q.dtype)
+    return o, kpool, vpool, meta, idx
+
+
+def _cp_mla_decode_local(cfg: ModelConfig, q_eff, latent, kpool, meta,
+                         cur_len, model_axis: str):
+    """MLA variant: ONE latent head, k_pool doubles as v_pool (value = the
+    first kv_lora_rank dims, sliced by the caller)."""
+    bs = cfg.dsa.block_size
+    NB_loc = kpool.shape[2]
+    shard = jax.lax.axis_index(model_axis)
+    offset = shard * NB_loc
+
+    blk = cur_len // bs
+    slot = cur_len % bs
+    mine = (blk >= offset) & (blk < offset + NB_loc)
+    lblk = jnp.clip(blk - offset, 0, NB_loc - 1)
+    lat1 = latent[:, None, :]                       # (B, 1, lat)
+    kpool = _append_masked(kpool, lat1, lblk, slot, mine)
+    meta = _update_meta_masked(meta, lat1, lblk, slot, mine, cfg.dsa)
+    new_len = cur_len + 1
+
+    scores_loc = dsa.score_blocks(q_eff, meta, cfg.dsa.metadata)
+    scores = jax.lax.all_gather(scores_loc, model_axis, axis=2, tiled=True)
+    idx, valid = dsa.select_blocks(scores, cfg.dsa, new_len)
+    loc_valid = valid & (idx >= offset) & (idx < offset + NB_loc)
+    lidx = jnp.clip(idx - offset, 0, NB_loc - 1)
+    m_cfg = cfg.mla
+    scale = 1.0 / ((m_cfg.qk_nope_head_dim + m_cfg.qk_rope_head_dim) ** 0.5)
+    acc, m, l = dsa.sparse_decode_attention_partial(
+        q_eff, kpool, kpool, lidx, loc_valid, new_len, offset, scale=scale)
+    m_g = jax.lax.pmax(m, model_axis)
+    corr = jnp.where(jnp.isfinite(m), jnp.exp(m - m_g), 0.0)
+    l_g = jax.lax.psum(l * corr, model_axis)
+    acc_g = jax.lax.psum(acc * corr[..., None], model_axis)
+    o_lat = (acc_g / jnp.maximum(l_g, 1e-30)[..., None]).astype(q_eff.dtype)
+    return o_lat, kpool, meta, idx
+
+
+def cp_mla_decode_attention(cfg: ModelConfig, q_eff, latent, cache, cur_len,
+                            *, dp_axes=("data",), model_axis="model",
+                            mesh=None):
+    """Context-parallel MLA decode (latent pool sharded over `model`)."""
+    from jax.sharding import PartitionSpec as P
+    n_dp = 1
+    for a in dp_axes:
+        n_dp *= dict(mesh.shape)[a] if mesh is not None else 1
+    B = q_eff.shape[0]
+    dp = (dp_axes if len(dp_axes) > 1 else dp_axes[0]) \
+        if (n_dp > 1 and B % n_dp == 0) else None
+    vec = P(dp, None, None)
+    lat_s = P(dp, None)
+    pool_s = P(dp, None, model_axis, None, None)
+    meta_s = P(*([dp, None, model_axis] + [None] * (cache["meta"].ndim - 3)))
+    fn = jax.shard_map(
+        lambda q_, lt_, kp_, mt_, cl_: _cp_mla_decode_local(
+            cfg, q_, lt_, kp_, mt_, cl_, model_axis),
+        mesh=mesh,
+        in_specs=(vec, lat_s, pool_s, meta_s, P(dp)),
+        out_specs=(vec, pool_s, meta_s, vec),
+        check_vma=False)
+    o_lat, kpool, meta, idx = fn(q_eff, latent, cache["k"], cache["meta"],
+                                 cur_len)
+    return o_lat, {"k": kpool, "meta": meta}, idx
+
+
+def cp_decode_attention(cfg: ModelConfig, q, k, v, cache, cur_len, *,
+                        dp_axes=("data",), model_axis="model", mesh=None):
+    """shard_map context-parallel select-then-compute decode attention.
+
+    q (B,Hq,hd); k/v (B,Hkv,hd) new-token projections; cache pools sharded
+    (dp, None, model, None, None).  Returns (o, new_cache, selected)."""
+    from jax.sharding import PartitionSpec as P
+    # drop batch sharding when B doesn't divide the dp axes (e.g. batch=1
+    # long-context decode: pure context parallelism over `model`)
+    n_dp = 1
+    for a in dp_axes:
+        n_dp *= dict(mesh.shape)[a] if mesh is not None else 1
+    B = q.shape[0]
+    if n_dp > 1 and B % n_dp == 0:
+        dp = dp_axes if len(dp_axes) > 1 else dp_axes[0]
+    else:
+        dp = None
+    vec = P(dp, None, None)
+    pool_s = P(dp, None, model_axis, None, None)
+    meta_s = P(*([dp, None, model_axis]
+                 + [None] * (cache["meta"].ndim - 3)))
+    fn = jax.shard_map(
+        lambda q_, k_, v_, kp_, vp_, mt_, cl_: _cp_decode_local(
+            cfg, q_, k_, v_, kp_, vp_, mt_, cl_, model_axis),
+        mesh=mesh,
+        in_specs=(vec, vec, vec, pool_s, pool_s, meta_s, P(dp)),
+        out_specs=(vec, pool_s, pool_s, meta_s, vec),
+        check_vma=False)
+    o, kpool, vpool, meta, idx = fn(q, k, v, cache["k"], cache["v"],
+                                    cache["meta"], cur_len)
+    return o, {"k": kpool, "v": vpool, "meta": meta}, idx
+
+
+# ---------------------------------------------------------------------------
+# GQA decode step (DSA select-then-compute)
+# ---------------------------------------------------------------------------
+
+def gqa_decode_step(p: Dict[str, jax.Array], cfg: ModelConfig, x: jax.Array,
+                    cache: Dict[str, jax.Array], cur_len: jax.Array,
+                    *, attn_impl: str = "ref",
+                    cp_axis: Optional[str] = None
+                    ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """One decode token.  x: (B, d); cur_len: (B,) tokens already cached.
+
+    Select-then-compute (paper Fig. 2): write new KV -> update metadata ->
+    score blocks -> top-k -> block-sparse attention.
+    cp_axis: context-parallel mesh axis name (pool blocks sharded) or None.
+    """
+    B, d = x.shape
+    Hq, Hkv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    q = x @ p["wq"]
+    k = x @ p["wk"]
+    v = x @ p["wv"]
+    if "bq" in p:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    q = q.reshape(B, 1, Hq, hd)
+    k = k.reshape(B, 1, Hkv, hd)
+    v = v.reshape(B, 1, Hkv, hd)
+    q = apply_rope(q, cur_len[:, None], cfg.rope_theta)[:, 0]   # (B,Hq,hd)
+    k = apply_rope(k, cur_len[:, None], cfg.rope_theta)[:, 0]
+    v = v[:, 0]
+
+    if CP_AXES is not None and cfg.dsa.enabled:
+        o, new_cache, sel = cp_decode_attention(
+            cfg, q, k, v, cache, cur_len,
+            dp_axes=CP_AXES[0], model_axis=CP_AXES[1], mesh=CP_MESH)
+        out = o.reshape(B, Hq * hd) @ p["wo"]
+        return out, new_cache, sel
+
+    bs = cfg.dsa.block_size
+    k_pool = _append_to_pool(cache["k"], k, cur_len, bs)
+    v_pool = _append_to_pool(cache["v"], v, cur_len, bs)
+    meta = _update_meta(cache["meta"], k, cur_len, cfg.dsa)
+    new_len = cur_len + 1
+
+    sel = None
+    if cfg.dsa.enabled:
+        scores = dsa.score_blocks(q, meta, cfg.dsa.metadata)
+        idx, valid = dsa.select_blocks(scores, cfg.dsa, new_len)
+        sel = idx
+        if attn_impl == "kernel":
+            from repro.kernels import ops as kops
+            o = kops.sparse_decode_attention(q, k_pool, v_pool, idx, valid,
+                                             new_len)
+        else:
+            o = dsa.sparse_decode_attention_ref(q, k_pool, v_pool, idx, valid,
+                                                new_len)
+    else:
+        o = dsa.full_decode_attention_ref(q, k_pool, v_pool, new_len)
+
+    out = o.reshape(B, Hq * hd) @ p["wo"]
+    return out, {"k": k_pool, "v": v_pool, "meta": meta}, sel
+
+
+def cross_decode_step(p: Dict[str, jax.Array], cfg: ModelConfig, x: jax.Array,
+                      k_enc: jax.Array, v_enc: jax.Array) -> jax.Array:
+    """Whisper decoder cross-attn for one token; x: (B, d)."""
+    out = cross_attention(p, cfg, x[:, None, :], k_enc, v_enc)
+    return out[:, 0]
+
+
+# ---------------------------------------------------------------------------
+# MLA — MiniCPM3 / DeepSeek-V2 latent attention
+# ---------------------------------------------------------------------------
+
+def mla_self_attention(p: Dict[str, jax.Array], cfg: ModelConfig, x: jax.Array,
+                       positions: jax.Array, *, return_latent: bool = False):
+    """Train / prefill MLA (non-absorbed form).  x: (B, S, d)."""
+    m = cfg.mla
+    B, S, _ = x.shape
+    H = cfg.num_heads
+    dn, dr, dv = m.qk_nope_head_dim, m.qk_rope_head_dim, m.v_head_dim
+
+    cq = rms_norm(x @ p["w_dq"], p["q_norm"], cfg.norm_eps)
+    qall = (cq @ p["w_uq"]).reshape(B, S, H, dn + dr)
+    q_nope, q_rope = qall[..., :dn], qall[..., dn:]
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+
+    c_kv = x @ p["w_dkv"]                                  # (B,S,lat)
+    c_kv_n = rms_norm(c_kv, p["kv_norm"], cfg.norm_eps)
+    k_rope = apply_rope((x @ p["w_kr"])[:, :, None, :], positions,
+                        cfg.rope_theta)[:, :, 0]           # (B,S,dr) shared
+    k_nope = (c_kv_n @ p["w_uk"]).reshape(B, S, H, dn)
+    vfull = (c_kv_n @ p["w_uv"]).reshape(B, S, H, dv)
+
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+    k = jnp.concatenate([k_nope,
+                         jnp.broadcast_to(k_rope[:, :, None, :], (B, S, H, dr))],
+                        axis=-1)
+    scale = 1.0 / ((dn + dr) ** 0.5)
+    o = flash_attention_jnp(q, k, vfull, scale=scale, causal=True)
+    out = o.reshape(B, S, H * dv) @ p["wo"]
+    if return_latent:
+        latent = jnp.concatenate([c_kv_n, k_rope], axis=-1)  # (B,S,lat+dr)
+        return out, latent
+    return out
+
+
+def mla_decode_step(p: Dict[str, jax.Array], cfg: ModelConfig, x: jax.Array,
+                    cache: Dict[str, jax.Array], cur_len: jax.Array,
+                    *, attn_impl: str = "ref"):
+    """Absorbed-form MLA decode: the latent cache behaves as a single KV head
+    with key dim (kv_lora_rank + rope) and value = latent (kv_lora_rank).
+    DSA metadata lives in latent space — beyond-paper extension (DESIGN §4).
+    """
+    m = cfg.mla
+    B, d = x.shape
+    H = cfg.num_heads
+    dn, dr, dv, lat = (m.qk_nope_head_dim, m.qk_rope_head_dim, m.v_head_dim,
+                       m.kv_lora_rank)
+
+    cq = rms_norm(x @ p["w_dq"], p["q_norm"], cfg.norm_eps)
+    qall = (cq @ p["w_uq"]).reshape(B, H, dn + dr)
+    q_nope, q_rope = qall[..., :dn], qall[..., dn:]
+    q_rope = apply_rope(q_rope[:, None], cur_len[:, None], cfg.rope_theta)[:, 0]
+
+    # absorb W_UK into the query: q_abs[h] = q_nope[h] @ W_UK[:, h, :].T
+    w_uk = p["w_uk"].reshape(lat, H, dn)
+    q_abs = jnp.einsum("bhd,lhd->bhl", q_nope.astype(jnp.float32),
+                       w_uk.astype(jnp.float32)).astype(x.dtype)
+    q_eff = jnp.concatenate([q_abs, q_rope], axis=-1)       # (B,H,lat+dr)
+
+    c_kv = x @ p["w_dkv"]
+    c_kv_n = rms_norm(c_kv, p["kv_norm"], cfg.norm_eps)
+    k_rope = apply_rope((x @ p["w_kr"])[:, None, None, :], cur_len[:, None],
+                        cfg.rope_theta)[:, 0, 0]
+    latent = jnp.concatenate([c_kv_n, k_rope], axis=-1)     # (B, lat+dr)
+
+    bs = cfg.dsa.block_size
+    k_pool = _append_to_pool(cache["k"], latent[:, None, :], cur_len, bs)
+    meta = _update_meta(cache["meta"], latent[:, None, :], cur_len, cfg.dsa)
+    new_len = cur_len + 1
+
+    scale = 1.0 / ((dn + dr) ** 0.5)
+    sel = None
+    if CP_AXES is not None and cfg.dsa.enabled:
+        o_lat, new_cache, sel = cp_mla_decode_attention(
+            cfg, q_eff, latent, cache, cur_len,
+            dp_axes=CP_AXES[0], model_axis=CP_AXES[1], mesh=CP_MESH)
+        o_lat = o_lat[..., :lat]
+        w_uv = p["w_uv"].reshape(lat, H, dv)
+        o = jnp.einsum("bhl,lhd->bhd", o_lat.astype(jnp.float32),
+                       w_uv.astype(jnp.float32)).astype(x.dtype)
+        out = o.reshape(B, H * dv) @ p["wo"]
+        return out, new_cache, sel
+    if cfg.dsa.enabled:
+        scores = dsa.score_blocks(q_eff, meta, cfg.dsa.metadata)
+        idx, valid = dsa.select_blocks(scores, cfg.dsa, new_len)
+        sel = idx
+        o_lat = dsa.sparse_decode_attention_ref(q_eff, k_pool, k_pool, idx,
+                                                valid, new_len, scale=scale)
+    else:
+        o_lat = dsa.full_decode_attention_ref(q_eff, k_pool, k_pool, new_len,
+                                              scale=scale)
+    # o_lat: (B, H, lat+dr); value part is the first `lat` dims
+    o_lat = o_lat[..., :lat]
+    w_uv = p["w_uv"].reshape(lat, H, dv)
+    o = jnp.einsum("bhl,lhd->bhd", o_lat.astype(jnp.float32),
+                   w_uv.astype(jnp.float32)).astype(x.dtype)
+    out = o.reshape(B, H * dv) @ p["wo"]
+    return out, {"k": k_pool, "meta": meta}, sel

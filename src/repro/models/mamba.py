@@ -1,0 +1,135 @@
+"""Mamba (selective SSM) block — Jamba's recurrent layer [arXiv:2403.19887].
+
+Train/prefill run a ``lax.scan`` over the sequence; decode carries an O(1)
+recurrent state (conv window + SSM state), which is why hybrid/SSM archs run
+``long_500k`` natively (DESIGN §4).  No KV cache -> the paper's DSA machinery
+does not apply to these layers; the working-set estimator counts them as 0.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import ModelConfig, dense_init, split_keys
+
+
+def _dims(cfg: ModelConfig):
+    di = cfg.mamba_expand * cfg.d_model
+    dt_rank = max(1, math.ceil(cfg.d_model / 16))
+    return di, dt_rank, cfg.mamba_d_state, cfg.mamba_d_conv
+
+
+def init_mamba_params(cfg: ModelConfig, key: jax.Array, dtype) -> Dict:
+    d = cfg.d_model
+    di, dt_rank, ds, dc = _dims(cfg)
+    ks = split_keys(key, 6)
+    A = jnp.tile(jnp.arange(1, ds + 1, dtype=jnp.float32)[None, :], (di, 1))
+    return {
+        "in_proj": dense_init(ks[0], (d, 2 * di), dtype),
+        "conv_w": dense_init(ks[1], (di, dc), dtype, scale=1.0 / math.sqrt(dc)),
+        "conv_b": jnp.zeros((di,), dtype),
+        "x_proj": dense_init(ks[2], (di, dt_rank + 2 * ds), dtype),
+        "dt_proj": dense_init(ks[3], (dt_rank, di), dtype),
+        "dt_bias": jnp.full((di,), -4.6, jnp.float32),  # softplus^-1(0.01)
+        "A_log": jnp.log(A),
+        "D": jnp.ones((di,), jnp.float32),
+        "out_proj": dense_init(ks[4], (di, d), dtype),
+    }
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """Depthwise causal conv1d.  x: (B, S, di); w: (di, dc)."""
+    B, S, di = x.shape
+    dc = w.shape[1]
+    xp = jnp.pad(x, ((0, 0), (dc - 1, 0), (0, 0)))
+    out = jnp.zeros_like(x, dtype=jnp.float32)
+    for j in range(dc):
+        out = out + xp[:, j:j + S, :].astype(jnp.float32) * w[:, j]
+    return (out + b).astype(x.dtype)
+
+
+def _ssm_scan(xc: jax.Array, dt: jax.Array, B_ssm: jax.Array, C_ssm: jax.Array,
+              A: jax.Array, D: jax.Array, h0: jax.Array
+              ) -> Tuple[jax.Array, jax.Array]:
+    """Selective scan.  xc/dt: (B,S,di); B_ssm/C_ssm: (B,S,ds); A: (di,ds).
+    h0: (B, di, ds).  Returns (y (B,S,di), h_final)."""
+    def step(h, inp):
+        x_t, dt_t, b_t, c_t = inp
+        dA = jnp.exp(dt_t[..., None] * A)                    # (B,di,ds)
+        dBx = dt_t[..., None] * b_t[:, None, :] * x_t[..., None]
+        h = dA * h + dBx
+        y = jnp.sum(h * c_t[:, None, :], axis=-1) + D * x_t  # (B,di)
+        return h, y
+
+    xs = (jnp.swapaxes(xc, 0, 1).astype(jnp.float32),
+          jnp.swapaxes(dt, 0, 1).astype(jnp.float32),
+          jnp.swapaxes(B_ssm, 0, 1).astype(jnp.float32),
+          jnp.swapaxes(C_ssm, 0, 1).astype(jnp.float32))
+    h, ys = jax.lax.scan(step, h0.astype(jnp.float32), xs)
+    return jnp.swapaxes(ys, 0, 1), h
+
+
+def init_mamba_state(cfg: ModelConfig, batch: int, dtype) -> Dict:
+    di, _, ds, dc = _dims(cfg)
+    return {
+        "conv": jnp.zeros((batch, dc - 1, di), dtype),
+        "ssm": jnp.zeros((batch, di, ds), jnp.float32),
+    }
+
+
+def _project(p: Dict, cfg: ModelConfig, xc: jax.Array):
+    di, dt_rank, ds, _ = _dims(cfg)
+    xdb = xc @ p["x_proj"]
+    dt = jax.nn.softplus(xdb[..., :dt_rank] @ p["dt_proj"] + p["dt_bias"])
+    B_ssm = xdb[..., dt_rank:dt_rank + ds]
+    C_ssm = xdb[..., dt_rank + ds:]
+    return dt, B_ssm, C_ssm
+
+
+def mamba_forward(p: Dict, cfg: ModelConfig, x: jax.Array,
+                  state: Dict = None, return_state: bool = False):
+    """x: (B, S, d) -> (B, S, d).  Full-sequence (train / prefill)."""
+    di, dt_rank, ds, dc = _dims(cfg)
+    B, S, d = x.shape
+    xz = x @ p["in_proj"]
+    x_in, z = xz[..., :di], xz[..., di:]
+    xc = jax.nn.silu(_causal_conv(x_in, p["conv_w"], p["conv_b"]))
+    dt, B_ssm, C_ssm = _project(p, cfg, xc)
+    A = -jnp.exp(p["A_log"])
+    h0 = (state["ssm"] if state is not None
+          else jnp.zeros((B, di, ds), jnp.float32))
+    y, h = _ssm_scan(xc, dt, B_ssm, C_ssm, A, p["D"], h0)
+    y = y.astype(x.dtype) * jax.nn.silu(z)
+    out = y @ p["out_proj"]
+    if return_state:
+        new_state = {"conv": x_in[:, S - (dc - 1):, :] if S >= dc - 1 else
+                     jnp.pad(x_in, ((0, 0), (dc - 1 - S, 0), (0, 0))),
+                     "ssm": h}
+        return out, new_state
+    return out
+
+
+def mamba_decode_step(p: Dict, cfg: ModelConfig, x: jax.Array, state: Dict
+                      ) -> Tuple[jax.Array, Dict]:
+    """One token.  x: (B, d)."""
+    di, dt_rank, ds, dc = _dims(cfg)
+    B, d = x.shape
+    xz = x @ p["in_proj"]
+    x_in, z = xz[..., :di], xz[..., di:]
+    # conv over cached window + current token
+    window = jnp.concatenate([state["conv"], x_in[:, None, :]], axis=1)  # (B,dc,di)
+    xc = jnp.sum(window.astype(jnp.float32)
+                 * jnp.swapaxes(p["conv_w"], 0, 1)[None], axis=1) + p["conv_b"]
+    xc = jax.nn.silu(xc.astype(x.dtype))                     # (B, di)
+    dt, B_ssm, C_ssm = _project(p, cfg, xc)
+    A = -jnp.exp(p["A_log"])
+    dA = jnp.exp(dt[..., None].astype(jnp.float32) * A)
+    h = dA * state["ssm"] + (dt[..., None] * B_ssm[:, None, :]
+                             * xc[..., None]).astype(jnp.float32)
+    y = jnp.sum(h * C_ssm[:, None, :].astype(jnp.float32), axis=-1) + p["D"] * xc
+    y = y.astype(x.dtype) * jax.nn.silu(z)
+    out = y @ p["out_proj"]
+    return out, {"conv": window[:, 1:, :], "ssm": h}

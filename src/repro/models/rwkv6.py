@@ -1,0 +1,165 @@
+"""RWKV-6 "Finch" block — attention-free, data-dependent decay [arXiv:2404.05892].
+
+Time-mix with per-channel data-dependent decay ``w_t`` (low-rank MLP on the
+token-shifted input) and a per-head matrix state ``S ∈ R^{hd×hd}``:
+
+    y_t   = (S_t + (u ⊙ k_t) v_tᵀ)ᵀ r_t
+    S_t+1 = diag(w_t) S_t + k_t v_tᵀ
+
+Decode carries ``S`` plus the single-token shift — O(1) state, no KV cache,
+hence DSA is *inapplicable* (DESIGN §4) and ``long_500k`` runs natively.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import ModelConfig, dense_init, split_keys
+
+
+def _dims(cfg: ModelConfig):
+    hd = cfg.rwkv_head_dim
+    H = cfg.d_model // hd
+    return H, hd
+
+
+def init_rwkv_params(cfg: ModelConfig, key: jax.Array, dtype) -> Dict:
+    d = cfg.d_model
+    H, hd = _dims(cfg)
+    lora = max(32, d // 32)
+    ks = split_keys(key, 12)
+    return {
+        # time-mix
+        "mu_r": jnp.full((d,), 0.5, dtype), "mu_k": jnp.full((d,), 0.5, dtype),
+        "mu_v": jnp.full((d,), 0.5, dtype), "mu_g": jnp.full((d,), 0.5, dtype),
+        "mu_w": jnp.full((d,), 0.5, dtype),
+        "w_r": dense_init(ks[0], (d, d), dtype),
+        "w_k": dense_init(ks[1], (d, d), dtype),
+        "w_v": dense_init(ks[2], (d, d), dtype),
+        "w_g": dense_init(ks[3], (d, d), dtype),
+        "w_o": dense_init(ks[4], (d, d), dtype),
+        # data-dependent decay lora: w = exp(-exp(w0 + tanh(x A) B))
+        "decay_w0": jnp.full((d,), -2.0, jnp.float32),
+        "decay_A": dense_init(ks[5], (d, lora), dtype),
+        "decay_B": dense_init(ks[6], (lora, d), dtype, scale=0.01),
+        "bonus_u": dense_init(ks[7], (H, hd), jnp.float32, scale=0.1),
+        "ln_x_w": jnp.ones((d,), jnp.float32),
+        "ln_x_b": jnp.zeros((d,), jnp.float32),
+        # channel-mix
+        "cmu_r": jnp.full((d,), 0.5, dtype), "cmu_k": jnp.full((d,), 0.5, dtype),
+        "cw_r": dense_init(ks[8], (d, d), dtype),
+        "cw_k": dense_init(ks[9], (d, cfg.d_ff), dtype),
+        "cw_v": dense_init(ks[10], (cfg.d_ff, d), dtype),
+    }
+
+
+def init_rwkv_state(cfg: ModelConfig, batch: int, dtype) -> Dict:
+    H, hd = _dims(cfg)
+    d = cfg.d_model
+    return {
+        "shift_t": jnp.zeros((batch, d), dtype),   # time-mix token shift
+        "shift_c": jnp.zeros((batch, d), dtype),   # channel-mix token shift
+        "S": jnp.zeros((batch, H, hd, hd), jnp.float32),
+    }
+
+
+def _group_norm(x: jax.Array, H: int, w, b, eps=1e-5) -> jax.Array:
+    """Per-head groupnorm on (B, d) with d = H*hd."""
+    B, d = x.shape
+    xh = x.reshape(B, H, d // H).astype(jnp.float32)
+    mu = jnp.mean(xh, axis=-1, keepdims=True)
+    var = jnp.var(xh, axis=-1, keepdims=True)
+    xh = (xh - mu) * jax.lax.rsqrt(var + eps)
+    return (xh.reshape(B, d) * w + b).astype(x.dtype)
+
+
+def _time_mix_projections(p: Dict, x: jax.Array, xx: jax.Array):
+    """x, xx (prev token): (..., d) -> r,k,v,g,w."""
+    def mix(mu):
+        return x + (xx - x) * mu
+    r = mix(p["mu_r"]) @ p["w_r"]
+    k = mix(p["mu_k"]) @ p["w_k"]
+    v = mix(p["mu_v"]) @ p["w_v"]
+    g = jax.nn.silu(mix(p["mu_g"]) @ p["w_g"])
+    xw = mix(p["mu_w"])
+    w = jnp.exp(-jnp.exp(p["decay_w0"]
+                         + (jnp.tanh(xw @ p["decay_A"]) @ p["decay_B"]
+                            ).astype(jnp.float32)))
+    return r, k, v, g, w
+
+
+def _wkv_step(S, r, k, v, w, u, H, hd):
+    """S: (B,H,hd,hd); r,k,v: (B,H,hd); w: (B,H,hd); u: (H,hd)."""
+    kv = k[..., :, None] * v[..., None, :]                    # (B,H,hd,hd)
+    y = jnp.einsum("bhij,bhi->bhj", S + u[None, :, :, None] * kv, r)
+    S_new = w[..., :, None] * S + kv
+    return S_new, y
+
+
+def rwkv_time_mix(p: Dict, cfg: ModelConfig, x: jax.Array, state: Dict,
+                  ) -> Tuple[jax.Array, Dict]:
+    """Full-sequence time-mix.  x: (B, S, d)."""
+    H, hd = _dims(cfg)
+    B, S, d = x.shape
+    xx = jnp.concatenate([state["shift_t"][:, None, :], x[:, :-1, :]], axis=1)
+    r, k, v, g, w = _time_mix_projections(p, x, xx)
+    rh = r.reshape(B, S, H, hd).astype(jnp.float32)
+    kh = k.reshape(B, S, H, hd).astype(jnp.float32)
+    vh = v.reshape(B, S, H, hd).astype(jnp.float32)
+    wh = w.reshape(B, S, H, hd)
+
+    def step(Scur, inp):
+        r_t, k_t, v_t, w_t = inp
+        S_new, y = _wkv_step(Scur, r_t, k_t, v_t, w_t, p["bonus_u"], H, hd)
+        return S_new, y
+
+    xs = tuple(jnp.swapaxes(a, 0, 1) for a in (rh, kh, vh, wh))
+    S_fin, ys = jax.lax.scan(step, state["S"], xs)
+    y = jnp.swapaxes(ys, 0, 1).reshape(B, S, d).astype(x.dtype)
+    y = jax.vmap(lambda yt: _group_norm(yt, H, p["ln_x_w"], p["ln_x_b"]),
+                 in_axes=1, out_axes=1)(y)
+    out = (y * g) @ p["w_o"]
+    new_state = dict(state, shift_t=x[:, -1, :], S=S_fin)
+    return out, new_state
+
+
+def rwkv_channel_mix(p: Dict, x: jax.Array, state: Dict,
+                     ) -> Tuple[jax.Array, Dict]:
+    xx = jnp.concatenate([state["shift_c"][:, None, :], x[:, :-1, :]], axis=1)
+    xr = x + (xx - x) * p["cmu_r"]
+    xk = x + (xx - x) * p["cmu_k"]
+    r = jax.nn.sigmoid(xr @ p["cw_r"])
+    k = jnp.square(jax.nn.relu(xk @ p["cw_k"]))
+    out = r * (k @ p["cw_v"])
+    return out, dict(state, shift_c=x[:, -1, :])
+
+
+def rwkv_time_mix_step(p: Dict, cfg: ModelConfig, x: jax.Array, state: Dict
+                       ) -> Tuple[jax.Array, Dict]:
+    """One-token decode.  x: (B, d)."""
+    H, hd = _dims(cfg)
+    B, d = x.shape
+    r, k, v, g, w = _time_mix_projections(p, x, state["shift_t"])
+    S_new, y = _wkv_step(state["S"],
+                         r.reshape(B, H, hd).astype(jnp.float32),
+                         k.reshape(B, H, hd).astype(jnp.float32),
+                         v.reshape(B, H, hd).astype(jnp.float32),
+                         w.reshape(B, H, hd), p["bonus_u"], H, hd)
+    y = _group_norm(y.reshape(B, d).astype(x.dtype), H,
+                    p["ln_x_w"], p["ln_x_b"])
+    out = (y * g) @ p["w_o"]
+    return out, dict(state, shift_t=x, S=S_new)
+
+
+def rwkv_channel_mix_step(p: Dict, x: jax.Array, state: Dict
+                          ) -> Tuple[jax.Array, Dict]:
+    xx = state["shift_c"]
+    xr = x + (xx - x) * p["cmu_r"]
+    xk = x + (xx - x) * p["cmu_k"]
+    r = jax.nn.sigmoid(xr @ p["cw_r"])
+    k = jnp.square(jax.nn.relu(xk @ p["cw_k"]))
+    out = r * (k @ p["cw_v"])
+    return out, dict(state, shift_c=x)

@@ -1,0 +1,233 @@
+"""Roofline analysis from compiled dry-run artifacts (deliverable g).
+
+Three terms per (arch × shape × mesh), TPU v5e constants:
+
+    compute    = HLO_FLOPs_global   / (chips × 197e12 FLOP/s)
+    memory     = HLO_bytes_global   / (chips × 819e9  B/s)
+    collective = coll_bytes_per_dev / 50e9 B/s per link
+
+``compiled.cost_analysis()`` reports the PARTITIONED (per-device) module —
+we normalise to global by ×chips.  Collective bytes are parsed from the
+optimized HLO: the sum of operand sizes of every all-gather / all-reduce /
+reduce-scatter / all-to-all / collective-permute (post-SPMD shapes are
+per-device, which is exactly the per-chip link traffic we need).
+"""
+from __future__ import annotations
+
+import re
+from typing import Any, Dict, Optional
+
+# TPU v5e hardware constants (per chip)
+PEAK_FLOPS = 197e12          # bf16
+HBM_BW = 819e9               # bytes/s
+ICI_BW = 50e9                # bytes/s per link
+HBM_CAP = 16e9               # bytes
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1,
+    "f8e5m2": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "token": 0, "opaque": 0,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+# shape like bf16[128,64,8]{2,1,0} or f32[] — capture dtype + dims
+_SHAPE_RE = re.compile(r"\b([a-z]+[0-9]*[a-z0-9]*)\[([0-9,]*)\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    b = _DTYPE_BYTES.get(dtype)
+    if b is None:
+        return 0
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * b
+
+
+_DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w.-]+)\s*=\s*(\(?[a-z0-9_]+\[[^=]*)")
+_ASSIGN_RE = re.compile(r"^\s*(?:ROOT\s+)?%?[\w.-]+\s*=\s*")
+_OPERAND_RE = re.compile(r"%([\w.-]+)")
+
+
+def _split_type_and_op(rest: str):
+    """'(f32[2], u32[]) all-reduce-start(%x), ...' -> (type, opcode, after).
+
+    Handles tuple result types whose parentheses would confuse a regex."""
+    rest = rest.lstrip()
+    if rest.startswith("("):
+        depth = 0
+        for i, ch in enumerate(rest):
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    typ = rest[:i + 1]
+                    tail = rest[i + 1:].lstrip()
+                    break
+        else:
+            return None
+    else:
+        sp = rest.find(" ")
+        if sp < 0:
+            return None
+        typ, tail = rest[:sp], rest[sp + 1:].lstrip()
+    par = tail.find("(")
+    if par < 0:
+        return None
+    return typ, tail[:par], tail[par + 1:]
+
+
+def _type_bytes(type_str: str) -> int:
+    """Total bytes of an HLO type string (handles tuple types)."""
+    return sum(_shape_bytes(d, dims) for d, dims in _SHAPE_RE.findall(type_str))
+
+
+def collective_bytes_from_hlo(hlo_text: str) -> Dict[str, Any]:
+    """Sum operand bytes of every collective op in optimized (post-SPMD) HLO.
+
+    Optimized HLO references operands by %name, so first build a symbol
+    table of instruction result types, then resolve each collective's
+    operand list.  ``-done`` ops are skipped (bytes counted at ``-start``).
+    Post-SPMD shapes are per-partition — exactly per-chip link traffic.
+    """
+    defs: Dict[str, int] = {}
+    for line in hlo_text.splitlines():
+        m = _DEF_RE.match(line)
+        if m:
+            # result type = everything between '=' and the op's '(' — for
+            # tuple results the whole "(t1, t2)" region precedes the opcode.
+            typ = m.group(2)
+            cut = typ.find("(", 1) if typ.startswith("(") else typ.find("(")
+            if typ.startswith("("):
+                # tuple type: up to matching ')'
+                depth = 0
+                for i, ch in enumerate(typ):
+                    if ch == "(":
+                        depth += 1
+                    elif ch == ")":
+                        depth -= 1
+                        if depth == 0:
+                            cut = i + 1
+                            break
+            typ = typ[:cut] if cut > 0 else typ
+            defs[m.group(1)] = _type_bytes(typ)
+    per_kind: Dict[str, int] = {k: 0 for k in _COLLECTIVES}
+    counts: Dict[str, int] = {k: 0 for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        ma = _ASSIGN_RE.match(line)
+        if not ma:
+            continue
+        parsed = _split_type_and_op(line[ma.end():])
+        if parsed is None:
+            continue
+        _, opcode, inner = parsed
+        kind = None
+        for c in _COLLECTIVES:
+            if opcode == c or opcode == c + "-start":
+                kind = c
+                break
+        if kind is None:
+            continue
+        # operands: %names inside the call parens
+        depth, buf = 1, []
+        for ch in inner:
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    break
+            buf.append(ch)
+        nbytes = 0
+        for name in _OPERAND_RE.findall("".join(buf)):
+            nbytes += defs.get(name, 0)
+        per_kind[kind] += nbytes
+        counts[kind] += 1
+    total = sum(per_kind.values())
+    return {"bytes_per_device": total,
+            "per_kind_bytes": {k: v for k, v in per_kind.items() if v},
+            "counts": {k: v for k, v in counts.items() if v}}
+
+
+def extract_cost(compiled) -> Dict[str, float]:
+    try:
+        ca = compiled.cost_analysis()
+    except Exception:   # noqa: BLE001
+        return {}
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    keep = {}
+    for k in ("flops", "bytes accessed", "transcendentals",
+              "optimal_seconds", "utilization"):
+        if k in ca:
+            keep[k] = float(ca[k])
+    # also fold in bytes accessed operand breakdown totals if present
+    return keep
+
+
+def extract_memory(compiled) -> Dict[str, int]:
+    try:
+        ma = compiled.memory_analysis()
+    except Exception:   # noqa: BLE001
+        return {}
+    out = {}
+    for k in ("argument_size_in_bytes", "output_size_in_bytes",
+              "temp_size_in_bytes", "generated_code_size_in_bytes",
+              "alias_size_in_bytes"):
+        v = getattr(ma, k, None)
+        if v is not None:
+            out[k] = int(v)
+    return out
+
+
+def model_flops(cfg, shape_kind: str, seq_len: int, global_batch: int) -> float:
+    """MODEL_FLOPS = 6·N_active·D (train: fwd+bwd ≈ 6ND; inference: 2ND)."""
+    n = cfg.active_param_count()
+    if shape_kind == "train":
+        tokens = seq_len * global_batch
+        return 6.0 * n * tokens
+    if shape_kind == "prefill":
+        tokens = seq_len * global_batch
+        return 2.0 * n * tokens
+    # decode: one token per request
+    return 2.0 * n * global_batch
+
+
+def roofline_report(cfg, rec: Dict[str, Any], chips: int) -> Dict[str, Any]:
+    """Compute the three roofline terms + dominant bottleneck for a record."""
+    cost = rec.get("cost", {})
+    coll = rec.get("collectives", {})
+    flops_dev = cost.get("flops", 0.0)
+    bytes_dev = cost.get("bytes accessed", 0.0)
+    flops_global = flops_dev * chips
+    bytes_global = bytes_dev * chips
+    coll_dev = coll.get("bytes_per_device", 0)
+
+    t_compute = flops_global / (chips * PEAK_FLOPS) if flops_global else 0.0
+    t_memory = bytes_global / (chips * HBM_BW) if bytes_global else 0.0
+    t_coll = coll_dev / ICI_BW
+
+    terms = {"compute": t_compute, "memory": t_memory, "collective": t_coll}
+    dominant = max(terms, key=terms.get) if any(terms.values()) else "n/a"
+
+    sp_kind = rec.get("kind", "train")
+    from repro.launch.steps import SHAPES
+    sp = SHAPES[rec["shape"]]
+    mf = model_flops(cfg, sp_kind, sp.seq_len, sp.global_batch)
+    useful = mf / flops_global if flops_global else 0.0
+    return {
+        "t_compute_s": t_compute,
+        "t_memory_s": t_memory,
+        "t_collective_s": t_coll,
+        "dominant": dominant,
+        "model_flops": mf,
+        "hlo_flops_global": flops_global,
+        "useful_flops_ratio": useful,
+        "hbm_bytes_per_device": bytes_dev,
+        "collective_bytes_per_device": coll_dev,
+    }

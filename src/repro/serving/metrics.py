@@ -1,0 +1,63 @@
+"""Serving metrics: TTFT / TBT / token throughput / goodput (paper §4)."""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional
+
+import numpy as np
+
+from repro.serving.request import Request
+
+
+@dataclasses.dataclass
+class ServingMetrics:
+    mean_ttft: float
+    p99_ttft: float
+    mean_tbt: float
+    p99_tbt: float
+    token_throughput: float        # generated tokens / sec
+    request_throughput: float
+    mean_queue_delay: float
+    total_time: float
+    num_finished: int
+
+    def row(self) -> str:
+        return (f"ttft={self.mean_ttft:.3f}s tbt={self.mean_tbt*1e3:.1f}ms "
+                f"tok/s={self.token_throughput:.1f} "
+                f"req/s={self.request_throughput:.3f} "
+                f"queue={self.mean_queue_delay:.3f}s")
+
+
+def compute_metrics(reqs: List[Request], total_time: float) -> ServingMetrics:
+    fin = [r for r in reqs if r.finish_time is not None]
+    ttfts = [r.ttft() for r in fin if r.ttft() is not None]
+    tbts = [t for r in fin for t in r.tbts()]
+    qd = [r.scheduled_time - r.arrival_time for r in fin
+          if r.scheduled_time is not None]
+    tokens = sum(r.generated for r in fin)
+    return ServingMetrics(
+        mean_ttft=float(np.mean(ttfts)) if ttfts else float("nan"),
+        p99_ttft=float(np.percentile(ttfts, 99)) if ttfts else float("nan"),
+        mean_tbt=float(np.mean(tbts)) if tbts else float("nan"),
+        p99_tbt=float(np.percentile(tbts, 99)) if tbts else float("nan"),
+        token_throughput=tokens / total_time if total_time > 0 else 0.0,
+        request_throughput=len(fin) / total_time if total_time > 0 else 0.0,
+        mean_queue_delay=float(np.mean(qd)) if qd else float("nan"),
+        total_time=total_time,
+        num_finished=len(fin),
+    )
+
+
+def meets_slo(reqs: List[Request], total_time: float, *,
+              p99_tbt_limit: float, mean_queue_limit: float = 2.0,
+              ) -> bool:
+    """Goodput SLO gate (paper Fig. 13): P99 TBT <= 25x a decode iteration
+    and mean scheduling delay <= 2 s."""
+    m = compute_metrics(reqs, total_time)
+    if m.num_finished == 0:
+        return False
+    if not np.isnan(m.p99_tbt) and m.p99_tbt > p99_tbt_limit:
+        return False
+    if not np.isnan(m.mean_queue_delay) and m.mean_queue_delay > mean_queue_limit:
+        return False
+    return True

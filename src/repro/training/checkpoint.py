@@ -1,0 +1,59 @@
+"""Checkpointing: save/restore param + optimizer pytrees to .npz.
+
+Pytrees are flattened to (path -> array) with '/'-joined key paths; restore
+rebuilds against a reference pytree (so list-of-dict layer structures round
+trip exactly).  Atomic rename avoids torn checkpoints.
+"""
+from __future__ import annotations
+
+import os
+import tempfile
+from typing import Any, Dict
+
+import jax
+import numpy as np
+
+
+def _flatten(tree: Any) -> Dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(
+            str(p.key) if hasattr(p, "key") else str(p.idx) for p in path)
+        flat[key] = np.asarray(leaf)
+    return flat
+
+
+def save_checkpoint(path: str, tree: Any, step: int = 0) -> None:
+    flat = _flatten(tree)
+    flat["__step__"] = np.asarray(step)
+    d = os.path.dirname(os.path.abspath(path))
+    os.makedirs(d, exist_ok=True)
+    fd, tmp = tempfile.mkstemp(dir=d, suffix=".tmp.npz")
+    os.close(fd)
+    try:
+        np.savez(tmp, **flat)      # savez keeps the name (ends in .npz)
+        os.replace(tmp, path)
+    finally:
+        if os.path.exists(tmp):
+            os.unlink(tmp)
+
+
+def restore_checkpoint(path: str, reference: Any) -> Any:
+    """Restore into the structure of `reference` (dtypes preserved)."""
+    with np.load(path) as data:
+        flat = {k: data[k] for k in data.files}
+    step = int(flat.pop("__step__", 0))
+    leaves_ref, treedef = jax.tree_util.tree_flatten_with_path(reference)
+    new_leaves = []
+    for path_k, leaf in leaves_ref:
+        key = "/".join(
+            str(p.key) if hasattr(p, "key") else str(p.idx) for p in path_k)
+        if key not in flat:
+            raise KeyError(f"checkpoint missing key {key!r}")
+        arr = flat[key]
+        if arr.shape != leaf.shape:
+            raise ValueError(f"shape mismatch for {key}: "
+                             f"{arr.shape} vs {leaf.shape}")
+        new_leaves.append(jax.numpy.asarray(arr, dtype=leaf.dtype))
+    treedef = jax.tree_util.tree_structure(reference)
+    return jax.tree_util.tree_unflatten(treedef, new_leaves), step

@@ -1,0 +1,91 @@
+"""Training loop: jit'd train_step + host loop with checkpointing.
+
+``make_train_step`` builds a pure (params, opt_state, batch) ->
+(params, opt_state, metrics) function suitable for jax.jit with in/out
+shardings from `repro.launch.sharding` — the same function the multi-pod
+dry-run lowers for the train_4k input shape.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.data.pipeline import DataConfig, TokenStream
+from repro.models import model as M
+from repro.models.common import ModelConfig
+from repro.training.checkpoint import restore_checkpoint, save_checkpoint
+from repro.training.optimizer import (AdamWConfig, adamw_update,
+                                      init_opt_state)
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    steps: int = 200
+    log_every: int = 10
+    ckpt_every: int = 0             # 0 = only final
+    ckpt_path: str = ""
+    remat: bool = True
+    opt: AdamWConfig = dataclasses.field(default_factory=AdamWConfig)
+
+
+def make_train_step(cfg: ModelConfig, opt_cfg: AdamWConfig,
+                    remat: bool = True) -> Callable:
+    def train_step(params, opt_state, batch):
+        def loss_fn(p):
+            loss, _ = M.forward_train(p, cfg, batch, remat=remat)
+            return loss
+        loss, grads = jax.value_and_grad(loss_fn)(params)
+        params2, opt_state2, om = adamw_update(opt_cfg, params, grads,
+                                               opt_state)
+        metrics = {"loss": loss, **om}
+        return params2, opt_state2, metrics
+    return train_step
+
+
+def make_eval_step(cfg: ModelConfig) -> Callable:
+    def eval_step(params, batch):
+        loss, _ = M.forward_train(params, cfg, batch, remat=False)
+        return loss
+    return eval_step
+
+
+def train(cfg: ModelConfig, tc: TrainConfig, data_cfg: DataConfig,
+          *, params=None, seed: int = 0, verbose: bool = True
+          ) -> Tuple[Any, Dict[str, list]]:
+    """Single-process training driver (CPU example scale)."""
+    key = jax.random.PRNGKey(seed)
+    if params is None:
+        params = M.init_params(cfg, key, jnp.float32)
+    opt_state = init_opt_state(params)
+    step_fn = jax.jit(make_train_step(cfg, tc.opt, tc.remat))
+    stream = TokenStream(data_cfg)
+    hist: Dict[str, list] = {"loss": [], "grad_norm": [], "lr": [],
+                             "step_time": []}
+    t_last = time.perf_counter()
+    for step in range(tc.steps):
+        batch = {k: jnp.asarray(v) for k, v in stream.batch().items()}
+        params, opt_state, m = step_fn(params, opt_state, batch)
+        if (step + 1) % tc.log_every == 0 or step == 0:
+            loss = float(m["loss"])
+            now = time.perf_counter()
+            dt = (now - t_last) / (1 if step == 0 else tc.log_every)
+            t_last = now
+            hist["loss"].append(loss)
+            hist["grad_norm"].append(float(m["grad_norm"]))
+            hist["lr"].append(float(m["lr"]))
+            hist["step_time"].append(dt)
+            if verbose:
+                print(f"step {step+1:5d} loss {loss:7.4f} "
+                      f"gnorm {float(m['grad_norm']):8.3f} "
+                      f"lr {float(m['lr']):.2e} {dt*1e3:7.1f} ms/step")
+        if tc.ckpt_every and tc.ckpt_path and (step + 1) % tc.ckpt_every == 0:
+            save_checkpoint(tc.ckpt_path, {"params": params,
+                                           "opt": opt_state}, step + 1)
+    if tc.ckpt_path:
+        save_checkpoint(tc.ckpt_path, {"params": params, "opt": opt_state},
+                        tc.steps)
+    return params, hist

@@ -1,0 +1,35 @@
+"""Shared fixtures.  NOTE: no XLA_FLAGS here — smoke tests and benches must
+see the single real CPU device; only dryrun.py requests 512 placeholders."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.models import model as M
+
+
+@pytest.fixture(scope="session")
+def tiny_cfg():
+    return get_smoke_config("qwen2-0.5b")
+
+
+@pytest.fixture(scope="session")
+def tiny_params(tiny_cfg):
+    return M.init_params(tiny_cfg, jax.random.PRNGKey(0), jnp.float32)
+
+
+@pytest.fixture(scope="session")
+def tiny_params_list(tiny_cfg):
+    return M.init_params(tiny_cfg, jax.random.PRNGKey(0), jnp.float32,
+                         stacked=False)
+
+
+def make_batch(cfg, B=2, S=64, key=3):
+    batch = {"tokens": jnp.full((B, S), key, jnp.int32),
+             "labels": jnp.ones((B, S), jnp.int32)}
+    if cfg.is_encoder_decoder:
+        batch["frames"] = jnp.ones((B, 32, cfg.d_model), jnp.float32) * 0.01
+    if cfg.frontend == "vit_patch_stub":
+        batch["patch_embeds"] = jnp.ones(
+            (B, cfg.num_patches, cfg.d_model), jnp.float32) * 0.01
+    return batch

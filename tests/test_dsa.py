@@ -1,0 +1,128 @@
+"""DSA property tests (hypothesis): metadata soundness, selection
+invariants, and the sparse≈full attention guarantee under full budget."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import dsa
+from repro.models.common import DSAConfig
+
+SET = dict(max_examples=25, deadline=None)
+
+
+@given(nb=st.integers(1, 8), bs=st.integers(1, 16), d=st.integers(1, 32),
+       seed=st.integers(0, 2**16))
+@settings(**SET)
+def test_cuboid_metadata_bounds_all_keys(nb, bs, d, seed):
+    keys = jax.random.normal(jax.random.PRNGKey(seed), (nb, bs, d))
+    meta = dsa.build_block_metadata(keys, "cuboid")
+    mn, mx = np.asarray(meta[..., 0, :]), np.asarray(meta[..., 1, :])
+    kn = np.asarray(keys)
+    assert (kn >= mn[:, None, :] - 1e-6).all()
+    assert (kn <= mx[:, None, :] + 1e-6).all()
+
+
+@given(nb=st.integers(1, 6), bs=st.integers(2, 8), d=st.integers(1, 16),
+       seed=st.integers(0, 2**16))
+@settings(**SET)
+def test_cuboid_score_upper_bounds_true_attention(nb, bs, d, seed):
+    """Quest guarantee: cuboid score >= max_j q·k_j within the block."""
+    k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+    keys = jax.random.normal(k1, (1, 1, nb, bs, d))
+    q = jax.random.normal(k2, (1, 2, d))         # 2 query heads, 1 kv head
+    meta = dsa.build_block_metadata(keys, "cuboid")
+    scores = np.asarray(dsa.score_blocks(q, meta, "cuboid"))   # (1,1,nb)
+    true = np.einsum("bhd,bcnsd->bhns", np.asarray(q),
+                     np.asarray(keys))            # (1,2,nb,bs)
+    true_max = true.max(axis=(1, 3))              # max over heads and tokens
+    assert (scores[0, 0] >= true_max[0] - 1e-4).all()
+
+
+@given(seed=st.integers(0, 2**16), nb=st.integers(2, 20),
+       cur_blocks=st.integers(1, 20), budget_blocks=st.integers(1, 8))
+@settings(**SET)
+def test_select_blocks_invariants(seed, nb, cur_blocks, budget_blocks):
+    cur_blocks = min(cur_blocks, nb)
+    cfg = DSAConfig(block_size=4, token_budget=budget_blocks * 4,
+                    sink_blocks=1, recent_blocks=1)
+    scores = jax.random.normal(jax.random.PRNGKey(seed), (1, 1, nb))
+    cur_len = jnp.array([cur_blocks * 4], jnp.int32)
+    idx, valid = dsa.select_blocks(scores, cfg, cur_len)
+    idx, valid = np.asarray(idx), np.asarray(valid)
+    k = idx.shape[-1]
+    assert k == min(cfg.top_k_blocks, nb)
+    # all valid selections point at written blocks
+    assert (idx[valid] < cur_blocks).all()
+    # no duplicate valid selections
+    sel = idx[0, 0][valid[0, 0]]
+    assert len(set(sel.tolist())) == len(sel)
+    # sink block 0 and the most recent block are always selected when valid
+    if cur_blocks >= 1 and k >= 2:
+        assert 0 in sel
+        assert (cur_blocks - 1) in sel
+
+
+def test_sparse_equals_full_attention_when_budget_covers_all():
+    """With top-k >= all blocks, DSA output == dense attention output."""
+    B, Hq, Hkv, NB, bs, D = 2, 8, 2, 6, 8, 32
+    key = jax.random.PRNGKey(0)
+    ks = jax.random.split(key, 4)
+    q = jax.random.normal(ks[0], (B, Hq, D))
+    kp = jax.random.normal(ks[1], (B, Hkv, NB, bs, D))
+    vp = jax.random.normal(ks[2], (B, Hkv, NB, bs, D))
+    cur_len = jnp.array([NB * bs, NB * bs - 5], jnp.int32)
+    cfg = DSAConfig(block_size=bs, token_budget=NB * bs)
+    meta = dsa.build_block_metadata(kp, "cuboid")
+    scores = dsa.score_blocks(q, meta, "cuboid")
+    idx, valid = dsa.select_blocks(scores, cfg, cur_len)
+    sparse = dsa.sparse_decode_attention_ref(q, kp, vp, idx, valid, cur_len)
+    full = dsa.full_decode_attention_ref(q, kp, vp, cur_len)
+    np.testing.assert_allclose(np.asarray(sparse), np.asarray(full),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_sparse_attention_close_to_full_under_budget():
+    """Paper Table 1 rationale: with a fraction of the budget the sparse
+    output stays close to full attention (top-k picks the heavy hitters)."""
+    B, Hq, Hkv, NB, bs, D = 1, 4, 1, 16, 8, 32
+    key = jax.random.PRNGKey(1)
+    ks = jax.random.split(key, 4)
+    q = jax.random.normal(ks[0], (B, Hq, D))
+    # construct pools where a few blocks dominate: scale up block 3 and 11
+    kp = jax.random.normal(ks[1], (B, Hkv, NB, bs, D)) * 0.05
+    kp = kp.at[:, :, [3, 11]].multiply(120.0)
+    vp = jax.random.normal(ks[2], (B, Hkv, NB, bs, D))
+    cur_len = jnp.array([NB * bs], jnp.int32)
+    cfg = DSAConfig(block_size=bs, token_budget=8 * bs)   # half the blocks
+    meta = dsa.build_block_metadata(kp, "cuboid")
+    scores = dsa.score_blocks(q, meta, "cuboid")
+    idx, valid = dsa.select_blocks(scores, cfg, cur_len)
+    sparse = np.asarray(dsa.sparse_decode_attention_ref(
+        q, kp, vp, idx, valid, cur_len))
+    full = np.asarray(dsa.full_decode_attention_ref(q, kp, vp, cur_len))
+    rel = np.linalg.norm(sparse - full) / np.linalg.norm(full)
+    assert rel < 0.05, f"sparse deviates {rel:.3f} from full"
+
+
+@given(seed=st.integers(0, 2**16))
+@settings(**SET)
+def test_mean_metadata_is_block_mean(seed):
+    keys = jax.random.normal(jax.random.PRNGKey(seed), (3, 4, 8))
+    meta = dsa.build_block_metadata(keys, "mean")
+    np.testing.assert_allclose(np.asarray(meta),
+                               np.asarray(keys).mean(axis=1), rtol=1e-5)
+
+
+def test_metadata_valid_mask():
+    keys = jnp.ones((2, 4, 8))
+    valid = jnp.array([[True, True, False, False],
+                       [True, False, False, False]])
+    meta = dsa.build_block_metadata(keys * jnp.arange(1, 5)[None, :, None],
+                                    "cuboid", valid)
+    mn, mx = np.asarray(meta[..., 0, :]), np.asarray(meta[..., 1, :])
+    assert np.allclose(mx[0], 2.0) and np.allclose(mn[0], 1.0)
+    assert np.allclose(mx[1], 1.0) and np.allclose(mn[1], 1.0)

@@ -1,0 +1,135 @@
+"""Hierarchical KV cache manager property tests (hypothesis)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.kv_cache import (HBMCache, HostPool, KVCacheManager,
+                                 KVGeometry, TransferStats)
+
+SET = dict(max_examples=40, deadline=None)
+
+
+def geom(layers=2, heads=2, bs=8, hd=16):
+    return KVGeometry(num_layers=layers, num_kv_heads=heads, block_size=bs,
+                      head_dim=hd)
+
+
+# ---------------------------------------------------------------------------
+# HBMCache (LRU)
+# ---------------------------------------------------------------------------
+
+@given(cap=st.integers(1, 20),
+       accesses=st.lists(st.tuples(st.integers(0, 3), st.lists(
+           st.integers(0, 30), min_size=1, max_size=8)), max_size=30))
+@settings(**SET)
+def test_lru_capacity_never_exceeded(cap, accesses):
+    c = HBMCache(geom(), cap)
+    for layer, blocks in accesses:
+        c.access(layer, blocks)
+        assert c.num_resident <= cap
+
+
+@given(cap=st.integers(4, 32), blocks=st.lists(st.integers(0, 10),
+                                               min_size=1, max_size=4))
+@settings(**SET)
+def test_lru_repeat_access_hits(cap, blocks):
+    c = HBMCache(geom(), cap)
+    missing1 = c.access(0, blocks)
+    assert set(missing1) == set(blocks)           # cold cache: all miss
+    missing2 = c.access(0, blocks)
+    assert missing2 == []                          # warm: all hit
+    assert c.stats.hits == len(blocks)
+
+
+@given(seq=st.lists(st.integers(0, 50), min_size=1, max_size=100))
+@settings(**SET)
+def test_lru_hit_miss_accounting(seq):
+    c = HBMCache(geom(), 16)
+    for b in seq:
+        c.access(0, [b])
+    assert c.stats.hits + c.stats.misses == len(seq)
+    assert c.stats.h2d_blocks == c.stats.misses
+
+
+def test_lru_eviction_order():
+    c = HBMCache(geom(), 2)
+    c.access(0, [1])
+    c.access(0, [2])
+    c.access(0, [1])      # touch 1 -> 2 becomes LRU
+    c.access(0, [3])      # evicts 2
+    assert c.resident(0, 1) and c.resident(0, 3) and not c.resident(0, 2)
+
+
+def test_drop_layer():
+    c = HBMCache(geom(layers=3), 100)
+    c.access(0, [1, 2, 3])
+    c.access(1, [1, 2])
+    n = c.drop_layer(0)
+    assert n == 3 and c.num_resident == 2
+    assert not c.resident(0, 1) and c.resident(1, 1)
+
+
+# ---------------------------------------------------------------------------
+# HostPool (FlashD2H two-phase save)
+# ---------------------------------------------------------------------------
+
+@given(start=st.integers(0, 40), T=st.integers(1, 60), seed=st.integers(0, 99))
+@settings(**SET)
+def test_hostpool_save_flush_roundtrip(start, T, seed):
+    g = geom(layers=1, heads=2, bs=8, hd=4)
+    pool = HostPool(g, num_blocks=16)
+    rng = np.random.default_rng(seed)
+    T = min(T, 16 * 8 - start)
+    if T <= 0:
+        return
+    k_new = rng.normal(size=(2, T, 4)).astype(np.float32)
+    v_new = rng.normal(size=(2, T, 4)).astype(np.float32)
+    pool.save_contiguous(0, start, k_new, v_new)
+    pool.flush()
+    # read back token-by-token
+    for t in range(T):
+        blk, off = (start + t) // 8, (start + t) % 8
+        np.testing.assert_array_equal(pool.k[0, :, blk, off], k_new[:, t])
+        np.testing.assert_array_equal(pool.v[0, :, blk, off], v_new[:, t])
+
+
+def test_hostpool_transfer_accounting():
+    g = geom(layers=1, heads=2, bs=8, hd=4)
+    pool = HostPool(g, num_blocks=4)
+    k = np.zeros((2, 16, 4), np.float32)
+    pool.save_contiguous(0, 0, k, k)
+    assert pool.stats.d2h_calls == 1              # ONE contiguous memcpy
+    assert pool.stats.d2h_bytes == k.nbytes * 2
+    pool.flush()
+    assert pool.stats.d2h_blocks == 2             # scattered into 2 blocks
+    k2, v2 = pool.load_blocks(0, [0, 1])
+    assert pool.stats.h2d_calls == 1              # ONE fused gather
+    assert k2.shape == (2, 2, 8, 4)
+
+
+# ---------------------------------------------------------------------------
+# KVCacheManager
+# ---------------------------------------------------------------------------
+
+def test_manager_lifecycle_and_stats_retention():
+    g = geom()
+    mgr = KVCacheManager(g, hbm_budget_bytes=1 << 20)
+    mgr.register("r1", max_tokens=64, hbm_blocks_per_request=4)
+    mgr.caches["r1"].access(0, [0, 1, 2])
+    used = mgr.hbm_used_bytes()
+    assert used == 3 * g.block_bytes_per_head * g.num_kv_heads
+    mgr.release("r1")
+    assert mgr.hbm_used_bytes() == 0
+    # stats survive release
+    assert mgr.total_stats().misses == 3
+
+
+@given(bs=st.integers(1, 64), hd=st.integers(1, 256), heads=st.integers(1, 16),
+       layers=st.integers(1, 80))
+@settings(**SET)
+def test_geometry_byte_math(bs, hd, heads, layers):
+    g = KVGeometry(num_layers=layers, num_kv_heads=heads, block_size=bs,
+                   head_dim=hd)
+    assert g.block_bytes_per_head == bs * hd * 2 * 2
+    assert g.block_bytes == g.block_bytes_per_head * heads * layers
+    assert g.tokens_bytes(bs) == g.block_bytes

@@ -1,0 +1,65 @@
+"""Layer-segmented prefill planner properties (§3.4)."""
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.layer_prefill import (LayerPrefillState, hbm_footprint_tokens,
+                                      plan_segments)
+
+SET = dict(max_examples=50, deadline=None)
+
+
+@given(prompt=st.integers(1, 5000), layers=st.integers(1, 64),
+       step=st.integers(1, 5000))
+@settings(**SET)
+def test_plan_covers_prompt_exactly_per_layer(prompt, layers, step):
+    segs = plan_segments(prompt, layers, step)
+    # every layer appears, in order, covering [0, prompt) exactly
+    per_layer = {}
+    for s in segs:
+        per_layer.setdefault(s.layer, []).append(s)
+    assert sorted(per_layer) == list(range(layers))
+    for l, ss in per_layer.items():
+        pos = 0
+        for s in ss:
+            assert s.chunk_start == pos
+            pos += s.chunk_len
+        assert pos == prompt
+        assert ss[-1].is_last_chunk_of_layer
+        assert all(not s.is_last_chunk_of_layer for s in ss[:-1])
+    # exactly one terminal segment: last chunk of last layer
+    lasts = [s for s in segs if s.is_last]
+    assert len(lasts) == 1
+    assert lasts[0].layer == layers - 1
+
+
+@given(prompt=st.integers(1, 2000), layers=st.integers(1, 16),
+       step=st.integers(1, 2000))
+@settings(**SET)
+def test_layer_order_is_outer_loop(prompt, layers, step):
+    """Layer l's segments all precede layer l+1's (KV of layer l can be
+    evicted before l+1 starts — the one-layer HBM bound)."""
+    segs = plan_segments(prompt, layers, step)
+    layer_seq = [s.layer for s in segs]
+    assert layer_seq == sorted(layer_seq)
+
+
+def test_cursor_state():
+    segs = plan_segments(100, 3, 40)
+    stt = LayerPrefillState(segments=segs)
+    seen = []
+    while not stt.done:
+        seen.append(stt.advance())
+    assert seen == segs
+
+
+@given(prompt=st.integers(1, 4000), layers=st.integers(1, 64),
+       done=st.integers(0, 4000))
+@settings(**SET)
+def test_hbm_footprint_bound(prompt, layers, done):
+    done = min(done, prompt)
+    chunked = hbm_footprint_tokens(prompt, "chunked", layers, done)
+    seg = hbm_footprint_tokens(prompt, "layer_segmented", layers, done)
+    assert seg == prompt                     # ONE layer of the whole prompt
+    assert chunked == done * layers          # grows with progress
+    if done == prompt and layers > 1:
+        assert seg < chunked                 # the paper's Fig. 16a claim

@@ -1,0 +1,176 @@
+"""Per-architecture smoke tests (deliverable f) + model-level invariants."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ALL_ARCHS, ASSIGNED_ARCHS, get_config, \
+    get_smoke_config
+from repro.models import model as M
+from conftest import make_batch
+
+
+# ---------------------------------------------------------------------------
+# Assigned full configs carry the exact published dimensions
+# ---------------------------------------------------------------------------
+
+EXPECT = {
+    "kimi-k2-1t-a32b": dict(num_layers=61, d_model=7168, num_heads=64,
+                            num_kv_heads=8, d_ff=2048, vocab_size=163840,
+                            num_experts=384, top_k_experts=8),
+    "minicpm3-4b": dict(num_layers=62, d_model=2560, num_heads=40,
+                        d_ff=6400, vocab_size=73448),
+    "jamba-v0.1-52b": dict(num_layers=32, d_model=4096, num_heads=32,
+                           num_kv_heads=8, d_ff=14336, vocab_size=65536,
+                           num_experts=16, top_k_experts=2),
+    "arctic-480b": dict(num_layers=35, d_model=7168, num_heads=56,
+                        num_kv_heads=8, d_ff=4864, vocab_size=32000,
+                        num_experts=128, top_k_experts=2),
+    "whisper-small": dict(num_layers=12, d_model=768, num_heads=12,
+                          num_kv_heads=12, d_ff=3072, vocab_size=51865),
+    "internvl2-2b": dict(num_layers=24, d_model=2048, num_heads=16,
+                         num_kv_heads=8, d_ff=8192, vocab_size=92553),
+    "rwkv6-1.6b": dict(num_layers=24, d_model=2048, d_ff=7168,
+                       vocab_size=65536),
+    "granite-20b": dict(num_layers=52, d_model=6144, num_heads=48,
+                        num_kv_heads=1, d_ff=24576, vocab_size=49152),
+    "qwen2.5-3b": dict(num_layers=36, d_model=2048, num_heads=16,
+                       num_kv_heads=2, d_ff=11008, vocab_size=151936),
+    "qwen2-0.5b": dict(num_layers=24, d_model=896, num_heads=14,
+                       num_kv_heads=2, d_ff=4864, vocab_size=151936),
+}
+
+
+@pytest.mark.parametrize("arch", ASSIGNED_ARCHS)
+def test_assigned_config_dimensions(arch):
+    cfg = get_config(arch)
+    for k, v in EXPECT[arch].items():
+        assert getattr(cfg, k) == v, f"{arch}.{k}"
+    assert cfg.source, f"{arch} must cite its source"
+
+
+@pytest.mark.parametrize("arch", ASSIGNED_ARCHS)
+def test_smoke_config_is_reduced(arch):
+    s = get_smoke_config(arch)
+    assert s.num_layers <= 2 and s.d_model <= 512
+    if s.num_experts:
+        assert s.num_experts <= 4
+    f = get_config(arch)
+    assert s.arch_type == f.arch_type and s.attention_type == f.attention_type
+
+
+# ---------------------------------------------------------------------------
+# Smoke: one forward/train step per arch — shapes + no NaNs (deliverable f)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("arch", ASSIGNED_ARCHS)
+def test_smoke_forward_train_step(arch):
+    cfg = get_smoke_config(arch)
+    params = M.init_params(cfg, jax.random.PRNGKey(0), jnp.float32)
+    B, S = 2, 64
+    batch = make_batch(cfg, B, S)
+    loss, logits = M.forward_train(params, cfg, batch, remat=False)
+    text = S  # labels length
+    assert logits.shape == (B, text, cfg.vocab_size)
+    assert bool(jnp.isfinite(loss))
+    assert bool(jnp.all(jnp.isfinite(logits)))
+
+    # one actual optimizer step
+    from repro.training.optimizer import AdamWConfig, adamw_update, \
+        init_opt_state
+    opt = init_opt_state(params)
+    grads = jax.grad(
+        lambda p: M.forward_train(p, cfg, batch, remat=False)[0])(params)
+    p2, o2, m = adamw_update(AdamWConfig(lr=1e-3), params, grads, opt)
+    assert bool(jnp.isfinite(m["grad_norm"]))
+    # params actually changed
+    moved = any(not np.allclose(np.asarray(a), np.asarray(b))
+                for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(p2)))
+    assert moved
+
+
+@pytest.mark.parametrize("arch", ASSIGNED_ARCHS)
+def test_smoke_prefill_decode(arch):
+    cfg = get_smoke_config(arch)
+    params = M.init_params(cfg, jax.random.PRNGKey(0), jnp.float32)
+    B, S = 2, 64
+    batch = make_batch(cfg, B, S)
+    extra = cfg.num_patches if cfg.frontend == "vit_patch_stub" else 0
+    nb = (S + extra) // cfg.dsa.block_size + 2
+    logits, state = M.prefill(params, cfg, batch, nb, cache_dtype=jnp.float32)
+    assert logits.shape == (B, cfg.vocab_size)
+    for _ in range(3):
+        logits, state = M.decode_step(params, cfg,
+                                      jnp.array([5, 9], jnp.int32), state)
+        assert logits.shape == (B, cfg.vocab_size)
+        assert bool(jnp.all(jnp.isfinite(logits)))
+    assert int(state["cur_len"][0]) == S + extra + 3
+
+
+# ---------------------------------------------------------------------------
+# Decode == teacher-forced forward (consistency across the two paths)
+# ---------------------------------------------------------------------------
+
+def test_decode_matches_teacher_forcing(tiny_cfg, tiny_params):
+    """Prefill(t0..tn) then decode(t_{n+1}) must equal prefill(t0..t_{n+1})
+    when DSA covers every block (budget >= context)."""
+    cfg, params = tiny_cfg, tiny_params
+    toks = np.arange(5, 5 + 65, dtype=np.int32)
+    full = {"tokens": jnp.asarray(toks[None, :])}
+    part = {"tokens": jnp.asarray(toks[None, :-1])}
+    nb = 4
+    lg_full, _ = M.prefill(params, cfg, full, nb, cache_dtype=jnp.float32)
+    lg_part, state = M.prefill(params, cfg, part, nb,
+                               cache_dtype=jnp.float32)
+    lg_dec, _ = M.decode_step(params, cfg, jnp.asarray([toks[-1]]), state)
+    np.testing.assert_allclose(np.asarray(lg_dec), np.asarray(lg_full),
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_stacked_and_list_params_identical(tiny_cfg, tiny_params,
+                                           tiny_params_list):
+    cfg = tiny_cfg
+    batch = make_batch(cfg, 2, 64)
+    l1, _ = M.forward_train(tiny_params, cfg, batch, remat=False)
+    l2, _ = M.forward_train(tiny_params_list, cfg, batch, remat=False)
+    np.testing.assert_allclose(float(l1), float(l2), rtol=1e-6)
+
+
+def test_dsa_off_equals_dsa_on_with_full_budget(tiny_cfg):
+    """DSA with budget >= context must equal full (non-sparse) attention."""
+    cfg_on = tiny_cfg
+    cfg_off = dataclasses.replace(
+        tiny_cfg, dsa=dataclasses.replace(tiny_cfg.dsa, enabled=False))
+    params = M.init_params(cfg_on, jax.random.PRNGKey(0), jnp.float32)
+    toks = np.arange(5, 101, dtype=np.int32)
+    inp = {"tokens": jnp.asarray(toks[None, :])}
+    _, st_on = M.prefill(params, cfg_on, inp, 5, cache_dtype=jnp.float32)
+    _, st_off = M.prefill(params, cfg_off, inp, 5, cache_dtype=jnp.float32)
+    lg_on, _ = M.decode_step(params, cfg_on, jnp.asarray([7]), st_on)
+    lg_off, _ = M.decode_step(params, cfg_off, jnp.asarray([7]), st_off)
+    np.testing.assert_allclose(np.asarray(lg_on), np.asarray(lg_off),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_kernel_attn_impl_matches_ref(tiny_cfg, tiny_params):
+    cfg, params = tiny_cfg, tiny_params
+    toks = np.arange(5, 101, dtype=np.int32)
+    inp = {"tokens": jnp.asarray(toks[None, :])}
+    _, s1 = M.prefill(params, cfg, inp, 5, cache_dtype=jnp.float32)
+    _, s2 = M.prefill(params, cfg, inp, 5, cache_dtype=jnp.float32)
+    lg1, _ = M.decode_step(params, cfg, jnp.asarray([7]), s1,
+                           attn_impl="ref")
+    lg2, _ = M.decode_step(params, cfg, jnp.asarray([7]), s2,
+                           attn_impl="kernel")
+    np.testing.assert_allclose(np.asarray(lg1), np.asarray(lg2),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_param_count_matches_actual(tiny_cfg, tiny_params):
+    from repro.models.common import num_params
+    analytic = tiny_cfg.param_count()
+    actual = num_params(tiny_params)
+    # analytic formula ignores tiny norm/decay vectors — within 5 %
+    assert abs(analytic - actual) / actual < 0.05

@@ -1,0 +1,134 @@
+"""Scheduler (Algorithm 1) + working-set estimator property tests."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.kv_cache import KVGeometry
+from repro.core.scheduler import Scheduler, SchedulerConfig
+from repro.core.working_set import (DecodeWorkingSet, estimate_decode_ws_bytes,
+                                    estimate_prefill_ws_bytes)
+from repro.serving.request import Phase, Request
+
+SET = dict(max_examples=30, deadline=None)
+
+
+def geom():
+    return KVGeometry(num_layers=4, num_kv_heads=2, block_size=8, head_dim=16)
+
+
+def mk_sched(m_avl=0, ws=True, prefill_mode="layer_segmented", r_max=8,
+             t_max=4096, chunk=256):
+    return Scheduler(SchedulerConfig(
+        r_max=r_max, t_max=t_max, m_avl_bytes=m_avl,
+        prefill_mode=prefill_mode, chunk_size=chunk,
+        max_inject_tokens=chunk * 4, ws_control=ws), geom(), 4, 8)
+
+
+# ---------------------------------------------------------------------------
+# Working set
+# ---------------------------------------------------------------------------
+
+@given(sels=st.lists(st.lists(st.tuples(st.integers(0, 3), st.integers(0, 30)),
+                              max_size=10), min_size=1, max_size=30),
+       window=st.integers(1, 12))
+@settings(**SET)
+def test_ws_window_union(sels, window):
+    ws = DecodeWorkingSet(geom(), window=window)
+    for s in sels:
+        ws.observe(s)
+    expect = set()
+    for s in sels[-window:]:
+        expect |= set(s)
+    assert ws.union() == expect
+    assert ws.size_blocks() == len(expect)
+
+
+def test_ws_estimates():
+    g = geom()
+    ws = DecodeWorkingSet(g, window=4)
+    # cold estimate = worst case top_k * layers
+    cold = estimate_decode_ws_bytes(ws, g, top_k_blocks=8, num_layers=4)
+    assert cold == 8 * 4 * g.block_bytes_per_head * g.num_kv_heads
+    ws.observe([(0, 1), (1, 2)])
+    warm = estimate_decode_ws_bytes(ws, g, 8, 4)
+    assert warm == 2 * g.block_bytes_per_head * g.num_kv_heads
+    # layer-segmented prefill WS is 1/num_layers of chunked
+    ch = estimate_prefill_ws_bytes(g, 1024, "chunked")
+    ls = estimate_prefill_ws_bytes(g, 1024, "layer_segmented")
+    assert ch == ls * g.num_layers
+
+
+# ---------------------------------------------------------------------------
+# Algorithm 1: admitted working sets never exceed M_avl
+# ---------------------------------------------------------------------------
+
+@given(n_dec=st.integers(0, 10), n_wait=st.integers(0, 6),
+       m_avl_blocks=st.integers(1, 200), seed=st.integers(0, 99))
+@settings(**SET)
+def test_admission_bounded_by_m_avl(n_dec, n_wait, m_avl_blocks, seed):
+    g = geom()
+    per_lb = g.block_bytes_per_head * g.num_kv_heads
+    m_avl = m_avl_blocks * per_lb
+    s = mk_sched(m_avl=m_avl)
+    rng = np.random.default_rng(seed)
+    for i in range(n_dec):
+        r = Request(prompt_len=64, max_new_tokens=32)
+        r.phase = Phase.DECODE
+        s.running.append(r)
+        sel = [(l, int(b)) for l in range(4)
+               for b in rng.integers(0, 8, size=rng.integers(1, 6))]
+        s.observe_selection(r, sel)
+    for i in range(n_wait):
+        s.add_request(Request(prompt_len=128, max_new_tokens=8))
+    plan = s.schedule()
+    used = sum(s._estimate_ws(r) for r in plan.decode_reqs)
+    used += sum(s._estimate_ws(r) for r, _ in plan.prefill_reqs)
+    assert used <= m_avl
+
+
+def test_ws_control_off_admits_everything_within_rmax():
+    s = mk_sched(m_avl=0, ws=False, r_max=4)
+    for _ in range(6):
+        r = Request(prompt_len=32, max_new_tokens=4)
+        r.phase = Phase.DECODE
+        s.running.append(r)
+    plan = s.schedule()
+    assert len(plan.decode_reqs) == 4              # r_max enforced
+
+
+def test_fcfs_order_preserved():
+    s = mk_sched(m_avl=1 << 30)
+    reqs = [Request(prompt_len=64, max_new_tokens=4) for _ in range(3)]
+    for r in reqs:
+        s.add_request(r)
+    plan = s.schedule()
+    got = [r.req_id for r, _ in plan.prefill_reqs]
+    assert got == [r.req_id for r in reqs][:len(got)]
+    assert got  # at least one admitted
+
+
+def test_rejected_request_stays_schedulable():
+    """Algorithm 1 line 14: rejected request is reset, not dropped."""
+    g = geom()
+    per_lb = g.block_bytes_per_head * g.num_kv_heads
+    s = mk_sched(m_avl=9 * 4 * per_lb)   # fits ~1 cold decode WS (8*4 + eps)
+    r1 = Request(prompt_len=64, max_new_tokens=4)
+    r2 = Request(prompt_len=64, max_new_tokens=4)
+    for r in (r1, r2):
+        r.phase = Phase.DECODE
+        s.running.append(r)
+    plan = s.schedule()
+    assert len(plan.decode_reqs) == 1 and plan.rejected == 1
+    # next iteration it can still be scheduled
+    plan2 = s.schedule()
+    assert len(plan2.decode_reqs) == 1
+
+
+def test_chunked_prefill_respects_t_max():
+    s = mk_sched(m_avl=0, ws=False, prefill_mode="chunked", t_max=300,
+                 chunk=256)
+    s.add_request(Request(prompt_len=1000, max_new_tokens=4))
+    s.add_request(Request(prompt_len=1000, max_new_tokens=4))
+    plan = s.schedule()
+    assert plan.total_tokens <= 300
+    assert plan.prefill_reqs[0][1] == 256          # one chunk admitted

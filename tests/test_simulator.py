@@ -1,0 +1,83 @@
+"""Discrete-event simulator tests: the paper's qualitative results must
+reproduce on the cost model (Figs. 1, 10-13, 15)."""
+import pytest
+
+from repro.configs import get_config
+from repro.serving import costmodel as cm
+from repro.serving.simulator import SYSTEMS, ServingSimulator, SimConfig
+from repro.serving.trace import TraceConfig, generate_trace
+
+
+@pytest.fixture(scope="module")
+def lwm():
+    return get_config("lwm-7b")
+
+
+def run(lwm, system, rate=0.125, n=16, seed=0, **kw):
+    sim = ServingSimulator(lwm, SYSTEMS[system], sim=SimConfig(**kw))
+    trace = generate_trace(TraceConfig(request_rate=rate, num_requests=n,
+                                       seed=seed))
+    return sim, sim.run(trace)
+
+
+def test_all_systems_complete(lwm):
+    for name in SYSTEMS:
+        _, m = run(lwm, name, n=8)
+        assert m.num_finished == 8, name
+
+
+def test_sparse_attention_faster_decode_than_vllm(lwm):
+    """vLLM-S's TBT < vLLM's TBT (paper Fig. 12 at moderate rate)."""
+    _, m_v = run(lwm, "vllm", rate=0.1)
+    _, m_s = run(lwm, "vllm-s", rate=0.1)
+    assert m_s.mean_tbt < m_v.mean_tbt
+
+
+def test_naive_offload_has_worst_tbt(lwm):
+    """vLLM-SO pays fragmented-transfer cost every step (Fig. 12)."""
+    _, m_so = run(lwm, "vllm-so", rate=0.1)
+    for other in ("vllm", "vllm-s", "sparseserve"):
+        _, m_o = run(lwm, other, rate=0.1)
+        assert m_so.mean_tbt > m_o.mean_tbt, other
+
+
+def test_sparseserve_highest_throughput_at_high_rate(lwm):
+    """Figs. 10-11: under load SparseServe beats every baseline."""
+    results = {}
+    for name in ("vllm", "vllm-s", "vllm-so", "sparseserve"):
+        _, m = run(lwm, name, rate=0.5, n=24)
+        results[name] = m
+    best = max(results, key=lambda k: results[k].token_throughput)
+    assert best == "sparseserve", {
+        k: round(v.token_throughput, 1) for k, v in results.items()}
+    assert results["sparseserve"].mean_ttft <= min(
+        results[k].mean_ttft for k in ("vllm", "vllm-so"))
+
+
+def test_ws_control_reduces_block_loads(lwm):
+    """Fig. 15: WS-aware batch control cuts block loads under pressure."""
+    sim_no, _ = run(lwm, "vllm-so+ft", rate=0.5, n=24)
+    sim_wc, _ = run(lwm, "vllm-so+ft+wc", rate=0.5, n=24)
+    loads_no = sum(sim_no.loads_per_iter)
+    loads_wc = sum(sim_wc.loads_per_iter)
+    assert loads_wc < loads_no
+
+
+def test_transfer_cost_model_matches_fig4_shape():
+    """Fused transfers sustain >20 GB/s; memcpy collapses below 5-6 GB/s for
+    16 KB blocks (paper Fig. 4)."""
+    hw = cm.A100_40G
+    blk = 16 * 1024
+    bw_memcpy = cm.effective_bandwidth(hw, 256, blk, fused=False)
+    bw_fused = cm.effective_bandwidth(hw, 256, blk, fused=True)
+    assert bw_memcpy < 6e9
+    assert bw_fused > 20e9
+
+
+def test_goodput_ladder_monotone(lwm):
+    """Fig. 13: each SparseServe mechanism adds goodput (weak check: the
+    full system >= plain offloading system on sustainable throughput)."""
+    _, m_so = run(lwm, "vllm-so", rate=0.3, n=24)
+    _, m_ss = run(lwm, "sparseserve", rate=0.3, n=24)
+    assert m_ss.token_throughput >= m_so.token_throughput
+    assert m_ss.mean_queue_delay <= max(m_so.mean_queue_delay, 2.0)
