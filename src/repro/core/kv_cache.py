@@ -88,8 +88,11 @@ class HBMCache:
     def access(self, layer: int, blocks: List[int]) -> List[int]:
         """Touch `blocks` for `layer`; return the MISSING block ids (to load).
 
-        Evicts LRU entries beyond capacity.  One call = one decode-step
-        selection for one layer = one fused FlashH2D launch if any misses.
+        Evicts LRU entries beyond capacity.  Residency accounting ONLY
+        (hits/misses/evictions): the actual FlashH2D transfer — and its
+        h2d_* stats — happens exactly once, in the data plane
+        (``HostPool.load_blocks`` / ``KVCacheManager.load_blocks_fused``),
+        so ``total_stats`` never double-counts a transfer.
         """
         missing = []
         for b in blocks:
@@ -105,12 +108,6 @@ class HBMCache:
         while len(self._lru) > self.capacity:
             self._lru.popitem(last=False)
             self.stats.evictions += 1
-        if missing:
-            nbytes = len(missing) * self.geom.block_bytes_per_head * \
-                self.geom.num_kv_heads
-            self.stats.h2d_calls += 1
-            self.stats.h2d_blocks += len(missing)
-            self.stats.h2d_bytes += nbytes
         return missing
 
     def insert(self, layer: int, block: int) -> None:
@@ -154,6 +151,14 @@ class HostPool:
         """Phase 1 of FlashD2H: one contiguous D2H transfer into staging.
 
         k_new/v_new: (Hkv, T, D) for T new tokens starting at start_token."""
+        end_token = start_token + k_new.shape[1]
+        max_tokens = self.num_blocks * self.geom.block_size
+        if start_token < 0 or end_token > max_tokens:
+            raise ValueError(
+                f"HostPool.save_contiguous: tokens [{start_token}, {end_token})"
+                f" exceed the registered pool capacity of {max_tokens} tokens"
+                f" ({self.num_blocks} blocks x {self.geom.block_size}); "
+                f"register the request with a larger max_tokens")
         nbytes = k_new.nbytes * (2 if v_new is not None else 1)
         self.stats.d2h_calls += 1
         self.stats.d2h_bytes += nbytes
@@ -171,6 +176,11 @@ class HostPool:
             while t0 < T:
                 blk = (start + t0) // g.block_size
                 off = (start + t0) % g.block_size
+                if blk >= self.num_blocks:
+                    raise ValueError(
+                        f"HostPool.flush: staged token {start + t0} maps to "
+                        f"block {blk} but the pool only has "
+                        f"{self.num_blocks} blocks")
                 # split on block boundaries (start may be mid-block)
                 t1 = min(t0 + (g.block_size - off), T)
                 self.k[layer, :, blk, off:off + (t1 - t0)] = k_new[:, t0:t1]
@@ -182,14 +192,30 @@ class HostPool:
         self._staging.clear()
         return written
 
-    def load_blocks(self, layer: int, blocks: List[int]
-                    ) -> Tuple[np.ndarray, Optional[np.ndarray]]:
-        """FlashH2D data plane: fused gather of fragmented blocks.
+    def gather(self, layer: int, blocks: List[int]
+               ) -> Tuple[np.ndarray, Optional[np.ndarray]]:
+        """Data-plane gather of fragmented blocks — NO accounting.
 
-        Returns (k (Hkv, K, bs, D), v or None)."""
+        Returns (k (Hkv, K, bs, D), v or None).  Callers that represent one
+        fused kernel launch record the h2d_* stats themselves (either
+        ``load_blocks`` below or ``KVCacheManager.load_blocks_fused``)."""
+        if blocks and (max(blocks) >= self.num_blocks or min(blocks) < 0):
+            bad = max(blocks) if max(blocks) >= self.num_blocks \
+                else min(blocks)
+            raise ValueError(
+                f"HostPool.gather: block {bad} out of range "
+                f"(pool has {self.num_blocks} blocks)")
         idx = np.asarray(blocks, np.int32)
         k = self.k[layer][:, idx]
         v = None if self.v is None else self.v[layer][:, idx]
+        return k, v
+
+    def load_blocks(self, layer: int, blocks: List[int]
+                    ) -> Tuple[np.ndarray, Optional[np.ndarray]]:
+        """FlashH2D data plane: ONE fused gather of fragmented blocks.
+
+        Returns (k (Hkv, K, bs, D), v or None)."""
+        k, v = self.gather(layer, blocks)
         nbytes = k.nbytes * (1 if v is None else 2)
         self.stats.h2d_calls += 1
         self.stats.h2d_blocks += len(blocks) * self.geom.num_kv_heads
@@ -209,6 +235,7 @@ class KVCacheManager:
         self.caches: Dict[str, HBMCache] = {}
         self.pools: Dict[str, HostPool] = {}
         self._retired_stats = TransferStats()   # stats of released requests
+        self.fused_stats = TransferStats()      # batched FlashH2D launches
 
     # -- lifecycle ---------------------------------------------------------
     def register(self, req_id: str, max_tokens: int,
@@ -225,6 +252,37 @@ class KVCacheManager:
         if p is not None:
             self._retired_stats.merge(p.stats)
 
+    # -- data plane --------------------------------------------------------
+    def load_blocks_fused(self, layer: int,
+                          blocks_by_req: Dict[str, List[int]]
+                          ) -> Dict[str, Tuple[np.ndarray,
+                                               Optional[np.ndarray]]]:
+        """ONE fused FlashH2D launch covering every missing block of `layer`
+        across the whole decode batch (batched engine hot path).
+
+        The paper's FlashH2D kernel gathers fragmented blocks from pinned
+        DRAM in a single launch; under batched decode the launch amortizes
+        over ALL requests in the iteration, so h2d_calls grows
+        per-layer-per-iteration, not per-request.  Accounting lives HERE and
+        only here for these transfers (``HBMCache.access`` books residency
+        only), so each moved block is counted exactly once."""
+        out: Dict[str, Tuple[np.ndarray, Optional[np.ndarray]]] = {}
+        total_blocks = 0
+        total_bytes = 0
+        for req_id, blocks in blocks_by_req.items():
+            pool = self.pools.get(req_id)
+            if pool is None or not blocks:
+                continue
+            k, v = pool.gather(layer, blocks)
+            out[req_id] = (k, v)
+            total_blocks += len(blocks) * self.geom.num_kv_heads
+            total_bytes += k.nbytes * (1 if v is None else 2)
+        if total_blocks:
+            self.fused_stats.h2d_calls += 1
+            self.fused_stats.h2d_blocks += total_blocks
+            self.fused_stats.h2d_bytes += total_bytes
+        return out
+
     # -- accounting --------------------------------------------------------
     def hbm_used_bytes(self) -> int:
         per_lb = (self.geom.block_bytes_per_head * self.geom.num_kv_heads)
@@ -233,6 +291,7 @@ class KVCacheManager:
     def total_stats(self) -> TransferStats:
         s = TransferStats()
         s.merge(self._retired_stats)
+        s.merge(self.fused_stats)
         for c in self.caches.values():
             s.merge(c.stats)
         for p in self.pools.values():

@@ -24,7 +24,8 @@ import jax.numpy as jnp
 
 from repro.core import dsa
 from repro.models.common import (DSAConfig, MLAConfig, ModelConfig, apply_rope,
-                                 dense_init, rms_norm, split_keys)
+                                 dense_init, rms_norm, shard_map_compat,
+                                 split_keys)
 
 NEG_INF = -1e30
 
@@ -265,6 +266,36 @@ def init_layer_kv_pool(cfg: ModelConfig, batch: int, num_blocks: int,
     }
 
 
+def pad_pool_cache(cache: Dict[str, jax.Array], num_blocks: int
+                   ) -> Dict[str, jax.Array]:
+    """Zero-pad an attn-layer pool cache ({k[,v],meta}) along the block axis
+    (axis 2 for every component) to `num_blocks` — the padded-batch
+    abstraction batched decode uses to stack requests with heterogeneous
+    pool sizes.  Padded blocks sit beyond every request's ``cur_len`` so DSA
+    selection masks them out (select_blocks' n_valid bound)."""
+    nb = cache["k"].shape[2]
+    if nb == num_blocks:
+        return cache
+    if nb > num_blocks:
+        raise ValueError(f"cannot pad pool of {nb} blocks down to "
+                         f"{num_blocks}")
+    pad = num_blocks - nb
+    return {
+        key: jnp.pad(arr, ((0, 0), (0, 0), (0, pad))
+                     + ((0, 0),) * (arr.ndim - 3))
+        for key, arr in cache.items()
+    }
+
+
+def slice_pool_cache(cache: Dict[str, jax.Array], num_blocks: int
+                     ) -> Dict[str, jax.Array]:
+    """Inverse of ``pad_pool_cache``: trim the block axis back to the
+    request's own pool size after a batched decode step."""
+    if cache["k"].shape[2] == num_blocks:
+        return cache
+    return {key: arr[:, :, :num_blocks] for key, arr in cache.items()}
+
+
 def _append_to_pool(pool: jax.Array, new: jax.Array, cur_len: jax.Array,
                     block_size: int) -> jax.Array:
     """pool: (B, H, NB, bs, D); new: (B, H, D); cur_len: (B,)."""
@@ -422,13 +453,12 @@ def cp_mla_decode_attention(cfg: ModelConfig, q_eff, latent, cache, cur_len,
     lat_s = P(dp, None)
     pool_s = P(dp, None, model_axis, None, None)
     meta_s = P(*([dp, None, model_axis] + [None] * (cache["meta"].ndim - 3)))
-    fn = jax.shard_map(
+    fn = shard_map_compat(
         lambda q_, lt_, kp_, mt_, cl_: _cp_mla_decode_local(
             cfg, q_, lt_, kp_, mt_, cl_, model_axis),
         mesh=mesh,
         in_specs=(vec, lat_s, pool_s, meta_s, P(dp)),
-        out_specs=(vec, pool_s, meta_s, vec),
-        check_vma=False)
+        out_specs=(vec, pool_s, meta_s, vec))
     o_lat, kpool, meta, idx = fn(q_eff, latent, cache["k"], cache["meta"],
                                  cur_len)
     return o_lat, {"k": kpool, "meta": meta}, idx
@@ -455,13 +485,12 @@ def cp_decode_attention(cfg: ModelConfig, q, k, v, cache, cur_len, *,
     pool_s = P(dp, None, model_axis, None, None)
     meta_s = P(*([dp, None, model_axis]
                  + [None] * (cache["meta"].ndim - 3)))
-    fn = jax.shard_map(
+    fn = shard_map_compat(
         lambda q_, k_, v_, kp_, vp_, mt_, cl_: _cp_decode_local(
             cfg, q_, k_, v_, kp_, vp_, mt_, cl_, model_axis),
         mesh=mesh,
         in_specs=(vec, vec, vec, pool_s, pool_s, meta_s, P(dp)),
-        out_specs=(vec, pool_s, pool_s, meta_s, vec),
-        check_vma=False)
+        out_specs=(vec, pool_s, pool_s, meta_s, vec))
     o, kpool, vpool, meta, idx = fn(q, k, v, cache["k"], cache["v"],
                                     cache["meta"], cur_len)
     return o, {"k": kpool, "v": vpool, "meta": meta}, idx

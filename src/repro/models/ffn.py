@@ -94,11 +94,18 @@ def _dispatch_ranks_sort(expert_flat: jax.Array, E: int) -> jax.Array:
 
 
 def moe_apply(p: Dict, cfg: ModelConfig, x: jax.Array, *,
-              impl: str = "onehot") -> Tuple[jax.Array, jax.Array]:
-    """x: (B, S, d) -> (out (B,S,d), aux_loss scalar)."""
+              impl: str = "onehot",
+              drop_free: bool = False) -> Tuple[jax.Array, jax.Array]:
+    """x: (B, S, d) -> (out (B,S,d), aux_loss scalar).
+
+    drop_free: capacity covers every (token, slot) assignment — used by the
+    decode path, where capacity is a prefill throughput knob and must not
+    couple requests in a batched decode step (a dropped token would make
+    batched decode diverge from per-request decode)."""
     if EP_AXES is not None:
         return moe_apply_ep(p, cfg, x, dp_axes=EP_AXES[0],
-                            model_axis=EP_AXES[1], mesh=EP_MESH)
+                            model_axis=EP_AXES[1], mesh=EP_MESH,
+                            drop_free=drop_free)
     B, S, d = x.shape
     E, k = cfg.num_experts, cfg.top_k_experts
     T = B * S
@@ -118,6 +125,8 @@ def moe_apply(p: Dict, cfg: ModelConfig, x: jax.Array, *,
 
     cap = int(cfg.capacity_factor * T * k / E) + 1
     cap = max(4, -(-cap // 4) * 4)                            # round up to 4
+    if drop_free:
+        cap = max(cap, T * k)                 # worst case: all to one expert
 
     ef = expert_idx.reshape(T * k).astype(jnp.int32)
     if impl == "sort":
@@ -150,15 +159,14 @@ def moe_apply(p: Dict, cfg: ModelConfig, x: jax.Array, *,
 # ---------------------------------------------------------------------------
 
 def _moe_local(p: Dict, cfg: ModelConfig, x: jax.Array, model_axis: str,
-               dp_axes: Tuple[str, ...] = ("data",), impl: str = "onehot"
-               ) -> Tuple[jax.Array, jax.Array]:
+               dp_axes: Tuple[str, ...] = ("data",), impl: str = "onehot",
+               drop_free: bool = False) -> Tuple[jax.Array, jax.Array]:
     """Per-shard body: x (B_loc, S, d) replicated over `model`; expert
     weights hold E_loc local experts.  Computes the local experts'
     contribution to every local token; caller psums over `model`."""
     B, S, d = x.shape
     E, k = cfg.num_experts, cfg.top_k_experts
-    n_shards = jax.lax.axis_size(model_axis)
-    E_loc = p["w_gate"].shape[0]                 # E / n_shards
+    E_loc = p["w_gate"].shape[0]                 # E / num model shards
     shard = jax.lax.axis_index(model_axis)
     first = shard * E_loc
 
@@ -183,6 +191,8 @@ def _moe_local(p: Dict, cfg: ModelConfig, x: jax.Array, model_axis: str,
 
     cap = int(cfg.capacity_factor * T * k / E) + 1
     cap = max(4, -(-cap // 4) * 4)
+    if drop_free:
+        cap = max(cap, T * k)
     rank_fn = (_dispatch_ranks_sort if impl == "sort"
                else _dispatch_ranks_onehot)
     ranks = rank_fn(jnp.where(local, ef_loc, E_loc), E_loc + 1)
@@ -212,12 +222,12 @@ def _moe_local(p: Dict, cfg: ModelConfig, x: jax.Array, model_axis: str,
 
 def moe_apply_ep(p: Dict, cfg: ModelConfig, x: jax.Array, *,
                  dp_axes: Tuple[str, ...] = ("data",),
-                 model_axis: str = "model", mesh=None
-                 ) -> Tuple[jax.Array, jax.Array]:
+                 model_axis: str = "model", mesh=None,
+                 drop_free: bool = False) -> Tuple[jax.Array, jax.Array]:
     """shard_map expert-parallel MoE: batch over `dp_axes`, experts over
     `model_axis`; ONE psum over `model` as the combine collective."""
     from jax.sharding import PartitionSpec as P
-    shard_map = jax.shard_map
+    from repro.models.common import shard_map_compat
 
     # drop batch sharding when B doesn't divide the dp axes (e.g. batch=1
     # long-context decode — experts still parallel over `model`)
@@ -237,10 +247,10 @@ def moe_apply_ep(p: Dict, cfg: ModelConfig, x: jax.Array, *,
         w_spec["dense"] = {"w_gate": P(None, None), "w_up": P(None, None),
                            "w_down": P(None, None)}
 
-    fn = shard_map(
-        lambda pp, xx: _moe_local(pp, cfg, xx, model_axis, dp_axes, EP_IMPL),
+    fn = shard_map_compat(
+        lambda pp, xx: _moe_local(pp, cfg, xx, model_axis, dp_axes, EP_IMPL,
+                                  drop_free),
         mesh=mesh,
         in_specs=(w_spec, x_spec),
-        out_specs=(x_spec, P()),
-        check_vma=False)
+        out_specs=(x_spec, P()))
     return fn(p, x)

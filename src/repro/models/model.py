@@ -568,6 +568,89 @@ def prefill_finalize(params: Dict, cfg: ModelConfig, h: jax.Array):
 
 
 # ---------------------------------------------------------------------------
+# Batched multi-request decode: padded-batch stack / unstack
+# ---------------------------------------------------------------------------
+
+def is_pool_cache(c: Any) -> bool:
+    """True for an attn-layer paged-pool cache ({k[,v],meta})."""
+    return isinstance(c, dict) and "k" in c and "meta" in c
+
+
+def stack_decode_states(states: List[Dict]) -> Tuple[Dict, List[Tuple[int, List[Optional[int]]]]]:
+    """Stack per-request DecodeStates into ONE padded batch state.
+
+    The serving engine holds one DecodeState per request, with per-layer KV
+    pools whose block counts differ (prompt + generation budgets differ).
+    Batched decode pads every attn-layer pool along the block axis to the
+    batch maximum and concatenates along batch; recurrent-layer states (and
+    ``extra`` pytrees such as whisper enc_kvs) concatenate directly, so
+    requests whose extra shapes differ must be grouped by the caller.
+
+    Requires list-mode caches (the engine's representation).  Returns
+    (batched_state, layout) where layout records each input's (batch_size,
+    per-layer num_blocks) for ``unstack_decode_states``.
+    """
+    if not states:
+        raise ValueError("stack_decode_states: empty batch")
+    L = len(states[0]["caches"])
+    layout: List[Tuple[int, List[Optional[int]]]] = []
+    for s in states:
+        if not isinstance(s["caches"], list):
+            raise ValueError("stack_decode_states requires list-mode caches "
+                             "(per-layer), not stacked scan caches")
+        nbs = [s["caches"][l]["k"].shape[2] if is_pool_cache(s["caches"][l])
+               else None for l in range(L)]
+        layout.append((int(s["cur_len"].shape[0]), nbs))
+
+    caches: List[Any] = []
+    for l in range(L):
+        parts = [s["caches"][l] for s in states]
+        if is_pool_cache(parts[0]):
+            nb_max = max(p["k"].shape[2] for p in parts)
+            parts = [attn.pad_pool_cache(p, nb_max) for p in parts]
+            caches.append({key: jnp.concatenate([p[key] for p in parts],
+                                                axis=0)
+                           for key in parts[0]})
+        else:
+            caches.append(jax.tree.map(
+                lambda *xs: jnp.concatenate(xs, axis=0), *parts))
+    batched = {
+        "caches": caches,
+        "cur_len": jnp.concatenate([s["cur_len"] for s in states], axis=0),
+        "extra": (jax.tree.map(lambda *xs: jnp.concatenate(xs, axis=0),
+                               *[s["extra"] for s in states])
+                  if states[0]["extra"] else {}),
+    }
+    return batched, layout
+
+
+def unstack_decode_states(state: Dict,
+                          layout: List[Tuple[int, List[Optional[int]]]]
+                          ) -> List[Dict]:
+    """Split a batched DecodeState back into per-request states, trimming
+    each attn-layer pool to the request's own block count."""
+    out: List[Dict] = []
+    row = 0
+    for B, nbs in layout:
+        sl = slice(row, row + B)
+        caches: List[Any] = []
+        for l, c in enumerate(state["caches"]):
+            if is_pool_cache(c):
+                caches.append(attn.slice_pool_cache(
+                    {key: arr[sl] for key, arr in c.items()}, nbs[l]))
+            else:
+                caches.append(jax.tree.map(lambda x: x[sl], c))
+        out.append({
+            "caches": caches,
+            "cur_len": state["cur_len"][sl],
+            "extra": (jax.tree.map(lambda x: x[sl], state["extra"])
+                      if state["extra"] else {}),
+        })
+        row += B
+    return out
+
+
+# ---------------------------------------------------------------------------
 # Decode step
 # ---------------------------------------------------------------------------
 
@@ -598,7 +681,10 @@ def _decode_layer(p: Dict, cfg: ModelConfig, kind: str, x: jax.Array,
         x = x + h
     h_in = _norm(cfg, p["ffn_norm"], x)
     if "moe" in p:
-        h, _ = ffn_mod.moe_apply(p["moe"], cfg, h_in[:, None, :])
+        # drop_free: expert capacity must not couple the requests of a
+        # batched decode step (keeps batched == per-request decode)
+        h, _ = ffn_mod.moe_apply(p["moe"], cfg, h_in[:, None, :],
+                                 drop_free=True)
         h = h[:, 0]
     else:
         h = ffn_mod.ffn_apply(p["ffn"], h_in)

@@ -3,9 +3,15 @@
 This is the system the paper builds: a vLLM-style continuous-batching engine
 with
 
-  * dynamic sparse attention decode (select-then-compute, §2.2),
+  * dynamic sparse attention decode (select-then-compute, §2.2) executed as
+    ONE batched model forward per iteration: per-request KV pools stack into
+    a shared padded paged pool and `decode_step` runs at B = |decode batch|
+    with per-request cur_len (set ``batched_decode=False`` for the legacy
+    per-request loop),
   * a hierarchical HBM–DRAM KV manager with per-request LRU HBM caches and
-    host pools (§3.1 / §3.2 — FlashH2D/D2H accounting on every transfer),
+    host pools (§3.1 / §3.2 — FlashH2D/D2H accounting on every transfer;
+    decode misses load through ONE fused FlashH2D launch per layer per
+    iteration),
   * working-set-aware batch size control (Algorithm 1, §3.3),
   * layer-segmented OR chunked prefill (§3.4 vs the baseline).
 
@@ -55,6 +61,8 @@ class EngineConfig:
     charge_real_time: bool = False
     greedy: bool = True
     seed: int = 0
+    batched_decode: bool = True              # ONE decode_step per iteration
+                                             # (False: legacy B=1 loop)
 
 
 @dataclasses.dataclass
@@ -63,7 +71,8 @@ class _ReqState:
     req: Request
     tokens: np.ndarray                              # prompt token ids
     inputs_extra: Dict[str, Any]                    # frames / patch_embeds
-    decode_state: Optional[Dict] = None             # model DecodeState (B=1)
+    decode_state: Optional[Dict] = None             # model DecodeState (B=1;
+                                                    # stacked per iteration)
     lp: Optional[LayerPrefillState] = None          # layer-segmented cursor
     chunk_ctx: Optional[List] = None                # chunked: per-layer kv ctx
     chunk_rec: Optional[List] = None                # chunked: recurrent states
@@ -105,6 +114,8 @@ class ServingEngine:
         self.iterations = 0
         self.loads_per_iter: List[int] = []
         self.prefill_hbm_peak_tokens: int = 0    # Fig. 16a rationale metric
+        self.decode_step_calls = 0               # model forwards (decode)
+        self.decode_tokens = 0                   # tokens those calls produced
 
     # ------------------------------------------------------------------
     # Request intake
@@ -147,9 +158,16 @@ class ServingEngine:
                                   positions=positions, enc_kvs=enc_kvs,
                                   rec_states=M._init_rec_states(
                                       self.cfg, 1, h.dtype))
+        # decode-state extra keeps enc_kvs in per-layer LIST form so every
+        # leaf's axis 0 is the batch axis (stacked form leads with L, which
+        # would break the batched-decode concat)
+        enc_list = ([M.index_enc_kvs(enc_kvs, i)
+                     for i in range(self.cfg.num_layers)]
+                    if enc_kvs is not None else None)
         st.decode_state = {"caches": [None] * self.cfg.num_layers,
                            "cur_len": None,
-                           "extra": ({"enc_kvs": enc_kvs} if enc_kvs else {})}
+                           "extra": ({"enc_kvs": enc_list} if enc_list
+                                     else {})}
 
     def _run_layer_segment(self, st: _ReqState) -> bool:
         """Execute the next layer segment.  Returns True when prefill done.
@@ -307,32 +325,87 @@ class ServingEngine:
         p = np.exp(z) / np.exp(z).sum()
         return int(self.rng.choice(len(p), p=p))
 
+    def _account_selections(self, sts: List[_ReqState],
+                            selected: Dict[int, Any]) -> int:
+        """DSA selections -> LRU residency, fused FlashH2D loads, and the
+        working-set estimator.  `selected[l]` is (B, Hkv, K) over the batch
+        rows of `sts`.  For each layer, every request's misses are loaded
+        by ONE fused launch (`KVCacheManager.load_blocks_fused`) — h2d_calls
+        scale per-layer-per-iteration, not per-request.  Returns blocks
+        loaded."""
+        loads = 0
+        sel_pairs: Dict[str, List[Tuple[int, int]]] = \
+            {st.req.req_id: [] for st in sts}
+        for l in sorted(selected):
+            sel = np.asarray(selected[l])
+            lidx = self._attn_layer_index(l)
+            missing_by_req: Dict[str, List[int]] = {}
+            for b, st in enumerate(sts):
+                blocks = sorted(set(int(x) for x in sel[b].ravel()))
+                sel_pairs[st.req.req_id].extend((lidx, x) for x in blocks)
+                cache = self.kv_mgr.caches.get(st.req.req_id)
+                if cache is None:
+                    continue
+                missing = cache.access(lidx, blocks)
+                if missing:
+                    missing_by_req[st.req.req_id] = missing
+                    loads += len(missing)
+            if missing_by_req:
+                # gathered host blocks are not yet consumed: the device pool
+                # already holds all KV in this repro, so the fused gather
+                # models the transfer (bytes/calls feed the cost model);
+                # wiring it into device pools is a ROADMAP follow-up
+                self.kv_mgr.load_blocks_fused(lidx, missing_by_req)
+        for st in sts:
+            if sel_pairs[st.req.req_id]:
+                self.scheduler.observe_selection(st.req,
+                                                 sel_pairs[st.req.req_id])
+        return loads
+
     def _decode_one(self, st: _ReqState) -> Tuple[int, int]:
-        """One decode step: feed the last generated token, sample the next.
-        Returns (token, blocks_loaded)."""
+        """Legacy sequential decode step (B=1): feed the last generated
+        token, sample the next.  Returns (token, blocks_loaded)."""
         tok = st.out_tokens[-1]        # last generated token is the input
         logits, new_state, info = M.decode_step(
             self.params, self.cfg, jnp.asarray([tok], jnp.int32),
             st.decode_state, attn_impl=self.eng.attn_impl, return_info=True)
+        self.decode_step_calls += 1
+        self.decode_tokens += 1
         st.decode_state = new_state
         st.last_logits = logits
         nxt = self._sample(st)
         st.out_tokens.append(nxt)
-
-        # DSA selections -> working-set estimator + LRU HBM cache accounting
-        loads = 0
-        cache = self.kv_mgr.caches.get(st.req.req_id)
-        sel_pairs: List[Tuple[int, int]] = []
-        for l, sel in info["selected"].items():
-            blocks = sorted(set(int(b) for b in np.asarray(sel[0]).ravel()))
-            lidx = self._attn_layer_index(l)
-            sel_pairs.extend((lidx, b) for b in blocks)
-            if cache is not None:
-                missing = cache.access(lidx, blocks)
-                loads += len(missing)
-        if sel_pairs:
-            self.scheduler.observe_selection(st.req, sel_pairs)
+        loads = self._account_selections([st], info["selected"])
         return nxt, loads
+
+    def _decode_group_key(self, st: _ReqState) -> Tuple:
+        """Requests batch together when their non-pool state agrees in
+        every per-request shape except batch (e.g. whisper encoder length);
+        pool block counts may differ (padded to the batch max)."""
+        extra = st.decode_state.get("extra") or {}
+        return tuple((tuple(leaf.shape[1:]), str(leaf.dtype))
+                     for leaf in jax.tree.leaves(extra))
+
+    def _decode_batch(self, sts: List[_ReqState]) -> int:
+        """Tentpole hot path: ONE batched model forward for every running
+        decode request.  Per-request KV pools stack into a shared padded
+        paged pool, `decode_step` runs at B=len(sts) with per-request
+        cur_len, and DSA selection comes back as one (B, Hkv, K) tensor per
+        layer.  Returns blocks loaded."""
+        toks = jnp.asarray([st.out_tokens[-1] for st in sts], jnp.int32)
+        batched, layout = M.stack_decode_states(
+            [st.decode_state for st in sts])
+        logits, new_state, info = M.decode_step(
+            self.params, self.cfg, toks, batched,
+            attn_impl=self.eng.attn_impl, return_info=True)
+        self.decode_step_calls += 1
+        self.decode_tokens += len(sts)
+        for st, ns, row in zip(sts, M.unstack_decode_states(new_state, layout),
+                               range(len(sts))):
+            st.decode_state = ns
+            st.last_logits = logits[row:row + 1]
+            st.out_tokens.append(self._sample(st))
+        return self._account_selections(sts, info["selected"])
 
     # ------------------------------------------------------------------
     # Iteration
@@ -388,10 +461,22 @@ class ServingEngine:
                 req.token_times.append(self.now)
 
         # --- decode steps ----------------------------------------------
+        if self.eng.batched_decode:
+            # ONE scheduler-planned batched forward over all running decode
+            # requests (grouped only when per-request extra shapes differ,
+            # e.g. whisper encoder lengths)
+            groups: Dict[Tuple, List[_ReqState]] = {}
+            for req in plan.decode_reqs:
+                st = self.states[req.req_id]
+                groups.setdefault(self._decode_group_key(st), []).append(st)
+            for sts in groups.values():
+                iter_loads += self._decode_batch(sts)
+        else:
+            for req in plan.decode_reqs:
+                st = self.states[req.req_id]
+                _, loads = self._decode_one(st)
+                iter_loads += loads
         for req in plan.decode_reqs:
-            st = self.states[req.req_id]
-            tok, loads = self._decode_one(st)
-            iter_loads += loads
             req.generated += 1
             req.token_times.append(self.now)
             if req.generated >= req.max_new_tokens:

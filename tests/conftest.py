@@ -1,5 +1,10 @@
 """Shared fixtures.  NOTE: no XLA_FLAGS here — smoke tests and benches must
-see the single real CPU device; only dryrun.py requests 512 placeholders."""
+see the single real CPU device; only dryrun.py requests 512 placeholders.
+
+Model/param construction is session-scoped and shared across modules
+(``smoke_setup``) so the tier-1 suite initializes each smoke architecture
+once instead of once per module — part of keeping the CPU run under the
+10-minute budget."""
 import jax
 import jax.numpy as jnp
 import pytest
@@ -8,14 +13,39 @@ from repro.configs import get_smoke_config
 from repro.models import model as M
 
 
-@pytest.fixture(scope="session")
-def tiny_cfg():
-    return get_smoke_config("qwen2-0.5b")
+def make_abstract_mesh(sizes, names):
+    """jax.sharding.AbstractMesh across jax versions: new API takes
+    (axis_sizes, axis_names); 0.4.x takes ((name, size), ...)."""
+    from jax.sharding import AbstractMesh
+    try:
+        return AbstractMesh(sizes, names)
+    except TypeError:
+        return AbstractMesh(tuple(zip(names, sizes)))
 
 
 @pytest.fixture(scope="session")
-def tiny_params(tiny_cfg):
-    return M.init_params(tiny_cfg, jax.random.PRNGKey(0), jnp.float32)
+def tiny_cfg(smoke_setup):
+    return smoke_setup("qwen2-0.5b")[0]
+
+
+@pytest.fixture(scope="session")
+def tiny_params(smoke_setup):
+    return smoke_setup("qwen2-0.5b")[1]
+
+
+@pytest.fixture(scope="session")
+def smoke_setup():
+    """get(arch) -> (smoke cfg, float32 params), cached for the session."""
+    cache = {}
+
+    def get(arch):
+        if arch not in cache:
+            cfg = get_smoke_config(arch)
+            cache[arch] = (cfg, M.init_params(cfg, jax.random.PRNGKey(0),
+                                              jnp.float32))
+        return cache[arch]
+
+    return get
 
 
 @pytest.fixture(scope="session")

@@ -1,0 +1,190 @@
+"""Batched multi-request decode: equivalence with the sequential loop,
+padded-batch stack/unstack invariants, and fused FlashH2D call scaling."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models import attention as attn
+from repro.models import model as M
+from repro.serving.engine import EngineConfig, ServingEngine
+from repro.serving.request import Request
+
+
+def _run_engine(cfg, params, batched, prompts, gen=5, seed=7, **kw):
+    eng = ServingEngine(params, cfg, EngineConfig(
+        chunk_size=64, r_max=4, batched_decode=batched, **kw))
+    rng = np.random.default_rng(seed)
+    order = []
+    for p in prompts:
+        toks = rng.integers(4, cfg.vocab_size, p).astype(np.int32)
+        r = Request(prompt_len=p, max_new_tokens=gen)
+        eng.submit(r, tokens=toks)
+        order.append(r.req_id)
+    eng.run()
+    return eng, [eng.states[rid].out_tokens for rid in order]
+
+
+@pytest.fixture(scope="module")
+def mixed_runs(smoke_setup):
+    """Batched + sequential runs over mixed prompt lengths (48/96/72)."""
+    cfg, params = smoke_setup("qwen2-0.5b")
+    return (_run_engine(cfg, params, True, (48, 96, 72)),
+            _run_engine(cfg, params, False, (48, 96, 72)))
+
+
+@pytest.fixture(scope="module")
+def miss_runs(smoke_setup):
+    """Batched + sequential runs with a 1-block LRU: every decode step
+    misses, exposing the FlashH2D launch-count difference."""
+    cfg, params = smoke_setup("qwen2-0.5b")
+    return (_run_engine(cfg, params, True, (64, 64, 64), gen=8,
+                        hbm_blocks_per_request=1),
+            _run_engine(cfg, params, False, (64, 64, 64), gen=8,
+                        hbm_blocks_per_request=1))
+
+
+def test_batched_equals_sequential_mixed_prompt_lengths(mixed_runs):
+    """The tentpole guarantee: batched decode produces identical greedy
+    tokens to the per-request loop across heterogeneous pool sizes."""
+    (e_b, toks_b), (e_s, toks_s) = mixed_runs
+    assert toks_b == toks_s
+    assert all(len(t) == 5 for t in toks_b)
+    # batching collapses per-request forwards into per-iteration forwards
+    # (each request's FIRST token is sampled from prefill logits, so decode
+    # produces gen-1 = 4 tokens per request)
+    assert e_b.decode_step_calls < e_s.decode_step_calls
+    assert e_b.decode_tokens == e_s.decode_tokens == 12
+    assert e_s.decode_step_calls == 12               # legacy: one per token
+
+
+def test_batched_decode_transfer_accounting_identical(miss_runs):
+    """Blocks moved (bytes, misses) must not depend on the decode path;
+    only the CALL count (fused launches) may shrink."""
+    (e_b, _), (e_s, _) = miss_runs
+    s_b, s_s = e_b.transfer_stats(), e_s.transfer_stats()
+    assert s_b.h2d_blocks == s_s.h2d_blocks
+    assert s_b.h2d_bytes == s_s.h2d_bytes
+    assert s_b.misses == s_s.misses
+    assert sum(e_b.loads_per_iter) == sum(e_s.loads_per_iter)
+
+
+def test_fused_h2d_calls_per_layer_not_per_request(miss_runs):
+    """Launch counts: at most layers-per-iteration (batched) vs
+    layers-per-request-per-iteration (sequential)."""
+    (e_b, _), (e_s, _) = miss_runs
+    s_b, s_s = e_b.transfer_stats(), e_s.transfer_stats()
+    assert s_b.h2d_calls < s_s.h2d_calls
+    # batched: at most one fused launch per attention layer per iteration
+    assert s_b.h2d_calls <= e_b.geom.num_layers * e_b.iterations
+    # sequential: some iterations must have paid per-request launches
+    assert s_s.h2d_calls > e_s.geom.num_layers * e_s.iterations
+
+
+def test_batched_greedy_tokens_with_misses(miss_runs):
+    (e_b, toks_b), (e_s, toks_s) = miss_runs
+    assert toks_b == toks_s
+    assert all(len(t) == 8 for t in toks_b)
+
+
+def test_stack_unstack_roundtrip(smoke_setup):
+    """stack -> unstack returns each request's state unchanged (padded
+    blocks trimmed back)."""
+    cfg, params = smoke_setup("qwen2-0.5b")
+    states = []
+    for S, nb in ((40, 4), (64, 6)):
+        toks = jnp.arange(5, 5 + S, dtype=jnp.int32)[None, :]
+        _, st = M.prefill(params, cfg, {"tokens": toks}, nb,
+                          cache_dtype=jnp.float32)
+        # engine states are list-mode; prefill with stacked params returns
+        # stacked caches -> expand to the per-layer list form
+        if isinstance(st["caches"], dict):
+            st["caches"] = [
+                jax.tree.map(lambda x, i=i: x[i], st["caches"])
+                for i in range(cfg.num_layers)]
+        states.append(st)
+    batched, layout = M.stack_decode_states(states)
+    assert int(batched["cur_len"].shape[0]) == 2
+    back = M.unstack_decode_states(batched, layout)
+    for orig, rec in zip(states, back):
+        for a, b in zip(jax.tree.leaves(orig), jax.tree.leaves(rec)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_pad_slice_pool_cache_roundtrip():
+    pool = {"k": jnp.ones((1, 2, 3, 4, 8)), "v": jnp.ones((1, 2, 3, 4, 8)),
+            "meta": jnp.ones((1, 2, 3, 2, 8))}
+    padded = attn.pad_pool_cache(pool, 7)
+    assert padded["k"].shape == (1, 2, 7, 4, 8)
+    assert padded["meta"].shape == (1, 2, 7, 2, 8)
+    assert float(padded["k"][:, :, 3:].sum()) == 0.0
+    back = attn.slice_pool_cache(padded, 3)
+    for key in pool:
+        np.testing.assert_array_equal(np.asarray(back[key]),
+                                      np.asarray(pool[key]))
+    with pytest.raises(ValueError):
+        attn.pad_pool_cache(pool, 2)
+
+
+def test_batched_decode_groups_by_encoder_length(smoke_setup):
+    """Whisper requests with unequal encoder lengths cannot share one
+    forward; the engine groups them and still matches sequential decode
+    (regression: enc_kvs must batch along the BATCH axis, not layers)."""
+    cfg, params = smoke_setup("whisper-small")
+
+    def run(batched):
+        eng = ServingEngine(params, cfg, EngineConfig(
+            r_max=4, batched_decode=batched))
+        for S_enc in (16, 16, 24):
+            eng.submit(Request(prompt_len=48, max_new_tokens=3),
+                       frames=np.ones((1, S_enc, cfg.d_model),
+                                      np.float32) * .01)
+        eng.run()
+        return eng, [st.out_tokens for st in eng.states.values()]
+
+    e_b, toks_b = run(True)
+    e_s, toks_s = run(False)
+    assert toks_b == toks_s
+    # the two S_enc=16 requests share a forward; S_enc=24 gets its own
+    assert e_b.decode_step_calls < e_s.decode_step_calls
+
+
+def test_batched_decode_on_hybrid_arch(smoke_setup):
+    """Recurrent (mamba) layer states batch alongside paged attn pools."""
+    cfg, params = smoke_setup("jamba-v0.1-52b")
+    e_b, toks_b = _run_engine(cfg, params, True, (48, 64), gen=4)
+    e_s, toks_s = _run_engine(cfg, params, False, (48, 64), gen=4)
+    assert toks_b == toks_s
+    assert e_b.decode_step_calls < e_s.decode_step_calls
+
+
+def test_moe_capacity_does_not_couple_batched_requests(smoke_setup):
+    """Regression: MoE expert capacity scales with the number of tokens in
+    the forward, so a batched decode step (T = B) could drop tokens that a
+    per-request step (T = 1) never drops — decode runs drop-free so batched
+    greedy outputs match sequential even under a tight capacity_factor."""
+    import dataclasses
+    cfg, params = smoke_setup("kimi-k2-1t-a32b")
+    cfg = dataclasses.replace(cfg, capacity_factor=0.3)  # runtime-only knob
+    rng = np.random.default_rng(3)
+    states, toks_next = [], []
+    for _ in range(8):
+        S = int(rng.integers(33, 64))
+        toks = rng.integers(4, cfg.vocab_size, S).astype(np.int32)
+        _, st = M.prefill(params, cfg, {"tokens": jnp.asarray(toks[None])},
+                          num_blocks=4, cache_dtype=jnp.float32)
+        if isinstance(st["caches"], dict):          # scan caches -> list
+            st["caches"] = [
+                jax.tree.map(lambda x, i=i: x[i], st["caches"])
+                for i in range(cfg.num_layers)]
+        states.append(st)
+        toks_next.append(int(rng.integers(4, cfg.vocab_size)))
+    batched, _ = M.stack_decode_states(states)
+    lg_b, _, _ = M.decode_step(params, cfg,
+                               jnp.asarray(toks_next, jnp.int32), batched,
+                               return_info=True)
+    got_b = np.argmax(np.asarray(lg_b), axis=-1)
+    got_s = np.asarray([int(np.argmax(np.asarray(M.decode_step(
+        params, cfg, jnp.asarray([t], jnp.int32), st)[0])[0]))
+        for st, t in zip(states, toks_next)])
+    np.testing.assert_array_equal(got_b, got_s)

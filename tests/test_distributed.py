@@ -12,6 +12,10 @@ import textwrap
 
 import pytest
 
+# every test spawns a fresh interpreter and compiles multi-device programs
+# (up to 512 host-platform placeholders) — minutes each on CPU
+pytestmark = pytest.mark.slow
+
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 

@@ -11,12 +11,9 @@ from repro.serving.engine import EngineConfig, ServingEngine
 from repro.serving.request import Phase, Request
 
 
-@pytest.fixture(scope="module")
-def setup(request):
-    from repro.configs import get_smoke_config
-    cfg = get_smoke_config("qwen2-0.5b")
-    params = M.init_params(cfg, jax.random.PRNGKey(0), jnp.float32)
-    return cfg, params
+@pytest.fixture()
+def setup(smoke_setup):
+    return smoke_setup("qwen2-0.5b")
 
 
 def run_engine(cfg, params, mode, n=3, prompt=96, gen=5, **kw):
@@ -138,12 +135,11 @@ def test_hybrid_batching(setup):
 @pytest.mark.parametrize("arch", ["rwkv6-1.6b", "jamba-v0.1-52b",
                                   "whisper-small", "internvl2-2b",
                                   "minicpm3-4b", "kimi-k2-1t-a32b"])
-def test_engine_on_nontrivial_arch_families(arch):
+def test_engine_on_nontrivial_arch_families(arch, smoke_setup):
     """The serving engine runs end-to-end on SSM / hybrid / enc-dec / VLM /
-    MLA / MoE smoke variants, not just dense GQA."""
-    from repro.configs import get_smoke_config
-    cfg = get_smoke_config(arch)
-    params = M.init_params(cfg, jax.random.PRNGKey(1), jnp.float32)
+    MLA / MoE smoke variants, not just dense GQA.  Batched decode is the
+    default path, so this also covers batch assembly per arch family."""
+    cfg, params = smoke_setup(arch)
     eng = ServingEngine(params, cfg, EngineConfig(r_max=2))
     extra = {}
     if cfg.is_encoder_decoder:

@@ -1,6 +1,8 @@
 """Hierarchical KV cache manager property tests (hypothesis)."""
 import numpy as np
 import pytest
+
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core.kv_cache import (HBMCache, HostPool, KVCacheManager,
@@ -48,7 +50,9 @@ def test_lru_hit_miss_accounting(seq):
     for b in seq:
         c.access(0, [b])
     assert c.stats.hits + c.stats.misses == len(seq)
-    assert c.stats.h2d_blocks == c.stats.misses
+    # access books residency only; h2d stats belong to the data plane
+    # (HostPool.load_blocks / KVCacheManager.load_blocks_fused)
+    assert c.stats.h2d_blocks == 0 and c.stats.h2d_calls == 0
 
 
 def test_lru_eviction_order():

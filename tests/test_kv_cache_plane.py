@@ -1,0 +1,113 @@
+"""KV-cache data-plane regression tests (no hypothesis): HostPool bounds
+checking and the count-each-transfer-exactly-once h2d invariant."""
+import numpy as np
+import pytest
+
+from repro.core.kv_cache import (HBMCache, HostPool, KVCacheManager,
+                                 KVGeometry)
+
+
+def geom(layers=2, heads=2, bs=8, hd=16):
+    return KVGeometry(num_layers=layers, num_kv_heads=heads, block_size=bs,
+                      head_dim=hd)
+
+
+# ---------------------------------------------------------------------------
+# HostPool bounds (regression: silent out-of-range scatter)
+# ---------------------------------------------------------------------------
+
+def test_save_contiguous_beyond_capacity_raises():
+    g = geom(layers=1, heads=2, bs=8, hd=4)
+    pool = HostPool(g, num_blocks=2)                  # 16 tokens max
+    k = np.zeros((2, 8, 4), np.float32)
+    pool.save_contiguous(0, 8, k, k)                  # tokens [8, 16) ok
+    pool.flush()
+    with pytest.raises(ValueError, match="exceed the registered pool"):
+        pool.save_contiguous(0, 9, k, k)              # tokens [9, 17) overflow
+    with pytest.raises(ValueError, match="exceed the registered pool"):
+        pool.save_contiguous(0, 16, k, k)             # entirely past the end
+
+
+def test_flush_rejects_stale_overflow_staging():
+    """Even if staging is corrupted directly, flush fails loudly instead of
+    scattering into a neighbouring block."""
+    g = geom(layers=1, heads=1, bs=8, hd=4)
+    pool = HostPool(g, num_blocks=2)
+    pool._staging.append((0, 12, np.zeros((1, 8, 4), np.float32), None))
+    with pytest.raises(ValueError, match="only has 2 blocks"):
+        pool.flush()
+
+
+def test_gather_out_of_range_raises():
+    g = geom(layers=1, heads=1, bs=8, hd=4)
+    pool = HostPool(g, num_blocks=4)
+    with pytest.raises(ValueError, match="out of range"):
+        pool.gather(0, [0, 4])
+    with pytest.raises(ValueError, match="out of range"):
+        pool.gather(0, [-1])                  # numpy would silently wrap
+
+
+# ---------------------------------------------------------------------------
+# Exactly-once h2d accounting across control plane + data plane
+# ---------------------------------------------------------------------------
+
+def test_access_books_residency_only():
+    c = HBMCache(geom(), capacity_blocks=8)
+    missing = c.access(0, [0, 1, 2])
+    assert missing == [0, 1, 2]
+    assert c.stats.misses == 3 and c.stats.h2d_calls == 0
+    assert c.stats.h2d_blocks == 0 and c.stats.h2d_bytes == 0
+
+
+def test_total_stats_counts_each_transfer_once():
+    """Decode path: access (residency) + load_blocks_fused (data plane)
+    must yield h2d_blocks == misses * kv_heads, not double."""
+    g = geom()
+    mgr = KVCacheManager(g, hbm_budget_bytes=1 << 20)
+    mgr.register("r1", max_tokens=64, hbm_blocks_per_request=8)
+    mgr.register("r2", max_tokens=64, hbm_blocks_per_request=8)
+    missing = {}
+    for rid in ("r1", "r2"):
+        missing[rid] = mgr.caches[rid].access(0, [0, 1, 2])
+    out = mgr.load_blocks_fused(0, missing)
+    s = mgr.total_stats()
+    assert s.misses == 6
+    assert s.h2d_blocks == 6 * g.num_kv_heads        # exactly once
+    assert s.h2d_calls == 1                          # ONE fused launch
+    expect_bytes = 6 * g.block_bytes_per_head * 2 * g.num_kv_heads
+    # gather returns float32 host arrays (4B) vs geometry's bf16 accounting;
+    # assert against the actual array sizes instead
+    total = sum(k.nbytes * (1 if v is None else 2)
+                for k, v in out.values())
+    assert s.h2d_bytes == total
+    assert expect_bytes > 0                          # geometry sanity
+
+
+def test_fused_load_one_call_per_layer():
+    g = geom(layers=3)
+    mgr = KVCacheManager(g, hbm_budget_bytes=1 << 20)
+    for rid in ("a", "b", "c"):
+        mgr.register(rid, max_tokens=64, hbm_blocks_per_request=4)
+    for layer in range(3):
+        mgr.load_blocks_fused(layer, {"a": [0], "b": [1], "c": [0, 1]})
+    s = mgr.total_stats()
+    assert s.h2d_calls == 3                          # one per layer
+    assert s.h2d_blocks == 3 * 4 * g.num_kv_heads
+
+
+def test_fused_load_empty_is_free():
+    g = geom()
+    mgr = KVCacheManager(g, hbm_budget_bytes=1 << 20)
+    mgr.register("r1", max_tokens=64, hbm_blocks_per_request=4)
+    assert mgr.load_blocks_fused(0, {}) == {}
+    assert mgr.load_blocks_fused(0, {"r1": []}) == {}
+    assert mgr.total_stats().h2d_calls == 0
+
+
+def test_load_blocks_still_accounts_for_single_request_use():
+    g = geom(layers=1, heads=2, bs=8, hd=4)
+    pool = HostPool(g, num_blocks=4)
+    k, v = pool.load_blocks(0, [0, 2])
+    assert k.shape == (2, 2, 8, 4)
+    assert pool.stats.h2d_calls == 1
+    assert pool.stats.h2d_blocks == 2 * g.num_kv_heads

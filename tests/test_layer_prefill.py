@@ -1,5 +1,7 @@
 """Layer-segmented prefill planner properties (§3.4)."""
 import pytest
+
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core.layer_prefill import (LayerPrefillState, hbm_footprint_tokens,

@@ -66,10 +66,9 @@ def test_smoke_config_is_reduced(arch):
 # ---------------------------------------------------------------------------
 
 @pytest.mark.parametrize("arch", ASSIGNED_ARCHS)
-def test_smoke_forward_train_step(arch):
-    cfg = get_smoke_config(arch)
-    params = M.init_params(cfg, jax.random.PRNGKey(0), jnp.float32)
-    B, S = 2, 64
+def test_smoke_forward_train_step(arch, smoke_setup):
+    cfg, params = smoke_setup(arch)
+    B, S = 2, 32      # grad+opt step per arch: small shapes keep tier-1 fast
     batch = make_batch(cfg, B, S)
     loss, logits = M.forward_train(params, cfg, batch, remat=False)
     text = S  # labels length
@@ -92,9 +91,8 @@ def test_smoke_forward_train_step(arch):
 
 
 @pytest.mark.parametrize("arch", ASSIGNED_ARCHS)
-def test_smoke_prefill_decode(arch):
-    cfg = get_smoke_config(arch)
-    params = M.init_params(cfg, jax.random.PRNGKey(0), jnp.float32)
+def test_smoke_prefill_decode(arch, smoke_setup):
+    cfg, params = smoke_setup(arch)
     B, S = 2, 64
     batch = make_batch(cfg, B, S)
     extra = cfg.num_patches if cfg.frontend == "vit_patch_stub" else 0

@@ -4,8 +4,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from jax.sharding import AbstractMesh, PartitionSpec as P
+from jax.sharding import PartitionSpec as P
 
+from conftest import make_abstract_mesh
 from repro.roofline.analysis import (_shape_bytes, _type_bytes,
                                      collective_bytes_from_hlo, model_flops)
 
@@ -81,12 +82,12 @@ def test_model_flops_train_is_6nd(tiny_cfg):
 
 @pytest.fixture(scope="module")
 def mesh():
-    return AbstractMesh((16, 16), ("data", "model"))
+    return make_abstract_mesh((16, 16), ("data", "model"))
 
 
 @pytest.fixture(scope="module")
 def pod_mesh():
-    return AbstractMesh((2, 16, 16), ("pod", "data", "model"))
+    return make_abstract_mesh((2, 16, 16), ("pod", "data", "model"))
 
 
 def specs_of(tree):

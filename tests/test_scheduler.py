@@ -1,6 +1,8 @@
 """Scheduler (Algorithm 1) + working-set estimator property tests."""
 import numpy as np
 import pytest
+
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core.kv_cache import KVGeometry

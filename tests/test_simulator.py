@@ -33,6 +33,7 @@ def test_sparse_attention_faster_decode_than_vllm(lwm):
     assert m_s.mean_tbt < m_v.mean_tbt
 
 
+@pytest.mark.slow
 def test_naive_offload_has_worst_tbt(lwm):
     """vLLM-SO pays fragmented-transfer cost every step (Fig. 12)."""
     _, m_so = run(lwm, "vllm-so", rate=0.1)
@@ -41,6 +42,7 @@ def test_naive_offload_has_worst_tbt(lwm):
         assert m_so.mean_tbt > m_o.mean_tbt, other
 
 
+@pytest.mark.slow
 def test_sparseserve_highest_throughput_at_high_rate(lwm):
     """Figs. 10-11: under load SparseServe beats every baseline."""
     results = {}
@@ -54,6 +56,7 @@ def test_sparseserve_highest_throughput_at_high_rate(lwm):
         results[k].mean_ttft for k in ("vllm", "vllm-so"))
 
 
+@pytest.mark.slow
 def test_ws_control_reduces_block_loads(lwm):
     """Fig. 15: WS-aware batch control cuts block loads under pressure."""
     sim_no, _ = run(lwm, "vllm-so+ft", rate=0.5, n=24)
@@ -74,6 +77,7 @@ def test_transfer_cost_model_matches_fig4_shape():
     assert bw_fused > 20e9
 
 
+@pytest.mark.slow
 def test_goodput_ladder_monotone(lwm):
     """Fig. 13: each SparseServe mechanism adds goodput (weak check: the
     full system >= plain offloading system on sustainable throughput)."""
