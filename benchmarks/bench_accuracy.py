@@ -8,6 +8,13 @@ retains 99% accuracy) maps to cosine >= 0.99 at budget >= context/4.
 """
 from __future__ import annotations
 
+import os as _os
+import sys as _sys
+
+_R = _os.path.dirname(_os.path.dirname(_os.path.abspath(__file__)))
+_sys.path[:0] = [p for p in (_R, _os.path.join(_R, "src"))
+                 if p not in _sys.path]
+
 import dataclasses
 
 import jax

@@ -4,12 +4,29 @@ Offloaded DSA serving (vLLM-SO+FT class) with a saturated queue and FIXED
 parallel batch size: throughput first rises with batch size, then collapses
 when the aggregate working set overflows the HBM cache (load storm).
 
-The second section measures the REAL engine hot path: with batched
-multi-request decode, one iteration runs ONE `decode_step` forward over the
-whole decode batch, so decode_step invocations per generated token drop to
-1/B — vs the 1-per-token Python loop of the sequential baseline.
+The second section measures the REAL engine hot path across all three
+decode planes on the same workload:
+
+* ``persistent`` — requests live in a jitted, bucketed DevicePoolPlane:
+  ZERO per-iteration stack/unstack copies, jit retraces bounded by the
+  bucket count (``jit_cache_hit`` is the fraction of iterations served by
+  the compile cache).
+* ``stacked`` — legacy: every iteration re-stacks all per-request pools
+  into a fresh padded device pool and unstacks it afterwards (one
+  ``stack_calls`` per iteration).
+* ``sequential`` — one eager forward per request-token.
+
+Run:  PYTHONPATH=src python -m benchmarks.run --only fig1
+      (or directly: python benchmarks/bench_batch_size.py)
 """
 from __future__ import annotations
+
+import os as _os
+import sys as _sys
+
+_R = _os.path.dirname(_os.path.dirname(_os.path.abspath(__file__)))
+_sys.path[:0] = [p for p in (_R, _os.path.join(_R, "src"))
+                 if p not in _sys.path]
 
 import numpy as np
 
@@ -37,8 +54,12 @@ def sim_section() -> None:
 
 
 def engine_section() -> None:
-    """Real-execution engine: decode_step launches per generated token,
-    batched (1 per iteration) vs sequential (1 per request-token)."""
+    """Real-execution engine: persistent DevicePoolPlane vs the legacy
+    stacked path vs the sequential loop — decode_step launches per token,
+    full-pool stack/unstack copies per iteration, and the jit compile-cache
+    hit rate (retraces bounded by shape buckets)."""
+    import time
+
     import jax
     import jax.numpy as jnp
 
@@ -47,23 +68,45 @@ def engine_section() -> None:
     from repro.serving.engine import EngineConfig, ServingEngine
     from repro.serving.request import Request
 
-    header("engine_batched_decode: decode_step invocations per token "
+    header("engine_decode_plane: persistent vs stacked vs sequential "
            "(smoke qwen2-0.5b, saturated decode batch)")
     cfg = get_smoke_config("qwen2-0.5b")
     params = M.init_params(cfg, jax.random.PRNGKey(0), jnp.float32)
-    for bs in (1, 2, 4):
-        row = {}
-        for batched in (True, False):
+    modes = (("persistent", dict(batched_decode=True,
+                                 decode_plane="persistent")),
+             ("stacked", dict(batched_decode=True, decode_plane="stacked")),
+             ("sequential", dict(batched_decode=False)))
+    for bs in (1, 2, 4, 8):
+        for mode, kw in modes:
             eng = ServingEngine(params, cfg, EngineConfig(
-                chunk_size=64, r_max=bs, batched_decode=batched))
+                chunk_size=64, r_max=bs, **kw))
             for _ in range(bs):
                 eng.submit(Request(prompt_len=64, max_new_tokens=8),
                            tokens=np.arange(5, 69, dtype=np.int32))
+            from repro.core.device_pool import decode_fn_for
+            fn = decode_fn_for(cfg, eng.eng.attn_impl)
+            traces0, calls0 = fn.trace_count, fn.calls
+            t0 = time.perf_counter()
             eng.run()
-            key = "batched" if batched else "sequential"
-            row[f"calls_per_tok_{key}"] = round(
-                eng.decode_step_calls / max(eng.decode_tokens, 1), 3)
-        emit("engine_decode", batch_size=bs, **row)
+            wall = time.perf_counter() - t0
+            row = dict(
+                batch_size=bs, mode=mode,
+                calls_per_tok=round(
+                    eng.decode_step_calls / max(eng.decode_tokens, 1), 3),
+                # per DECODE iteration (prefill-only iterations don't stack)
+                stack_unstack_per_decode=round(
+                    eng.stack_calls / max(eng.decode_step_calls, 1), 3),
+                wall_s=round(wall, 2))
+            if mode == "persistent" and eng.planes:
+                [plane] = eng.planes.values()
+                steps = fn.calls - calls0
+                row.update(
+                    jit_traces=fn.trace_count - traces0,
+                    jit_cache_hit=round(
+                        1.0 - (fn.trace_count - traces0) / max(steps, 1), 3),
+                    device_pool_mib=round(plane.device_bytes() / 2**20, 2),
+                    rows_reused=plane.rows_reused)
+            emit("engine_decode", **row)
 
 
 def main() -> None:

@@ -3,6 +3,13 @@ rate for vLLM / vLLM-S / vLLM-SO / SparseServe (LWM-7B + Llama3-8B,
 LongBench-shaped trace, discrete-event simulator on the A100 cost model)."""
 from __future__ import annotations
 
+import os as _os
+import sys as _sys
+
+_R = _os.path.dirname(_os.path.dirname(_os.path.abspath(__file__)))
+_sys.path[:0] = [p for p in (_R, _os.path.join(_R, "src"))
+                 if p not in _sys.path]
+
 from benchmarks.common import emit, header
 from repro.configs import get_config
 from repro.serving.simulator import SYSTEMS, ServingSimulator, SimConfig

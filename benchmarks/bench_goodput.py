@@ -3,6 +3,13 @@
 mechanism is added: SA -> +Offload -> +FT -> +WC -> +LP."""
 from __future__ import annotations
 
+import os as _os
+import sys as _sys
+
+_R = _os.path.dirname(_os.path.dirname(_os.path.abspath(__file__)))
+_sys.path[:0] = [p for p in (_R, _os.path.join(_R, "src"))
+                 if p not in _sys.path]
+
 from benchmarks.common import emit, header
 from repro.configs import get_config
 from repro.serving.metrics import meets_slo

@@ -7,6 +7,13 @@ locality that justifies the working-set estimator (w=12 plateaus).
 """
 from __future__ import annotations
 
+import os as _os
+import sys as _sys
+
+_R = _os.path.dirname(_os.path.dirname(_os.path.abspath(__file__)))
+_sys.path[:0] = [p for p in (_R, _os.path.join(_R, "src"))
+                 if p not in _sys.path]
+
 import dataclasses
 
 import jax

@@ -9,6 +9,13 @@ If results/roofline_pod1.json is missing, regenerate with:
 """
 from __future__ import annotations
 
+import os as _os
+import sys as _sys
+
+_R = _os.path.dirname(_os.path.dirname(_os.path.abspath(__file__)))
+_sys.path[:0] = [p for p in (_R, _os.path.join(_R, "src"))
+                 if p not in _sys.path]
+
 import json
 import os
 

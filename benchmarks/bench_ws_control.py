@@ -2,6 +2,13 @@
 and mean KV block loads/iteration, with and without WC, vs request rate."""
 from __future__ import annotations
 
+import os as _os
+import sys as _sys
+
+_R = _os.path.dirname(_os.path.dirname(_os.path.abspath(__file__)))
+_sys.path[:0] = [p for p in (_R, _os.path.join(_R, "src"))
+                 if p not in _sys.path]
+
 import numpy as np
 
 from benchmarks.common import emit, header

@@ -1,4 +1,11 @@
-"""Shared benchmark helpers: CSV emission, default model/trace configs."""
+"""Shared benchmark helpers: CSV emission, timing.
+
+Output convention (consumed by benchmarks/README.md schemas and any
+plotting scripts): one ``name,key=value,...`` line per data point on
+stdout, where ``name`` identifies the series within the figure.  Section
+headers are ``### title`` lines; everything else is free-form progress
+text.  Stdout is flushed per line so long sweeps stream.
+"""
 from __future__ import annotations
 
 import sys
@@ -7,11 +14,13 @@ from typing import Any, Iterable
 
 
 def emit(name: str, **fields: Any) -> None:
+    """Print one CSV data point: ``name,key=value,...``."""
     kv = ",".join(f"{k}={v}" for k, v in fields.items())
     print(f"{name},{kv}", flush=True)
 
 
 def header(title: str) -> None:
+    """Print a ``### title`` section header."""
     print(f"\n### {title}", flush=True)
 
 

@@ -1,15 +1,34 @@
 """Benchmark harness — one module per paper table/figure.
 
-    PYTHONPATH=src python -m benchmarks.run [--only fig4,fig8,...]
+    PYTHONPATH=src python -m benchmarks.run [--only fig1,fig8,...] [--list]
 
-Emits ``name,key=value,...`` CSV lines per figure (see each module's
-docstring for the paper artifact it reproduces).
+Also works as a plain script from ANY working directory (no PYTHONPATH
+needed — the repo root and src/ are put on sys.path automatically):
+
+    python benchmarks/run.py --only fig1
+
+Every bench module is equally invocable on its own, either way:
+
+    PYTHONPATH=src python -m benchmarks.bench_batch_size
+    python benchmarks/bench_batch_size.py
+
+Output is ``name,key=value,...`` CSV lines per figure on stdout (see
+benchmarks/README.md for each module's output schema and the paper
+artifact it reproduces).  Flags:
+
+    --only   comma-separated subset of the names below (default: all)
+    --list   print the available names and their modules, then exit
 """
 from __future__ import annotations
 
 import argparse
+import os as _os
 import sys
 import time
+
+_R = _os.path.dirname(_os.path.dirname(_os.path.abspath(__file__)))
+sys.path[:0] = [p for p in (_R, _os.path.join(_R, "src"))
+                if p not in sys.path]
 
 MODULES = {
     "fig1": "benchmarks.bench_batch_size",
@@ -25,19 +44,31 @@ MODULES = {
 
 
 def main() -> None:
-    ap = argparse.ArgumentParser()
+    ap = argparse.ArgumentParser(
+        description="Run the paper-figure benchmarks (see benchmarks/"
+                    "README.md for per-figure output schemas)")
     ap.add_argument("--only", default="",
-                    help=f"comma list of {list(MODULES)}")
+                    help=f"comma list of {list(MODULES)} (default: all)")
+    ap.add_argument("--list", action="store_true",
+                    help="list available benchmarks and exit")
     args = ap.parse_args()
+    if args.list:
+        for name, mod in MODULES.items():
+            print(f"{name:10s} {mod}")
+        return
     names = [n.strip() for n in args.only.split(",") if n.strip()] \
         or list(MODULES)
+    unknown = [n for n in names if n not in MODULES]
+    if unknown:
+        ap.error(f"unknown benchmark(s) {unknown}; choose from "
+                 f"{list(MODULES)}")
     import importlib
     t0 = time.perf_counter()
     failures = []
     for name in names:
-        mod = importlib.import_module(MODULES[name])
         t = time.perf_counter()
         try:
+            mod = importlib.import_module(MODULES[name])
             mod.main()
         except Exception as e:  # noqa: BLE001
             failures.append(name)

@@ -1,0 +1,459 @@
+"""Persistent shared device decode pool — the engine's decode data plane.
+
+Before this module, every batched decode iteration re-stacked each running
+request's per-layer KV pool into a fresh padded device pool
+(``model.stack_decode_states``) and unstacked it afterwards: O(batch x pool)
+HBM copies per generated token, exactly the fragmented KV-cache movement
+SparseServe's hierarchical HBM/DRAM design is meant to eliminate.
+
+``DevicePoolPlane`` replaces that round-trip with ONE persistent padded
+paged pool per layer that lives on device for the lifetime of the decode
+batch:
+
+* **Slot lifecycle** — a request joining decode is admitted once
+  (``admit``: its prefill-built pools are copied into a free batch row);
+  while it decodes, NOTHING is copied per iteration; when it finishes,
+  ``release`` frees the row for the next admitted request to reuse.  Freed
+  rows are reused lowest-first so replaying a trace is deterministic.
+* **Bucketed jit** — the batched ``model.decode_step`` is jit-compiled at
+  bucketed shapes (batch rows from ``BucketingPolicy.batch_buckets``, block
+  capacity rounded up to ``block_bucket``), so steady-state decode is one
+  cached compiled call per bucket instead of a retrace (or an eager
+  dispatch storm) per iteration.  Requests scheduled this iteration are
+  selected with a ``step_mask`` argument — occupancy changes do NOT change
+  shapes, hence do not retrace.  Pool buffers are donated to the jitted
+  call on accelerator backends so XLA updates them in place.
+* **FlashH2D/D2H wiring** — ``restore_blocks`` scatters fused-gather
+  payloads from ``KVCacheManager.load_blocks_fused`` directly into device
+  slots (the jnp scatter here is the interpret-mode stand-in for
+  ``repro.kernels.scatter_blocks``; ``gather_row_blocks`` mirrors
+  ``repro.kernels.gather_blocks``), and ``drop_blocks`` zeroes evicted
+  blocks so HBM eviction actually destroys device-resident data.  Block
+  metadata is never dropped: DSA scoring stays exact while block *data*
+  moves through the hierarchy.
+
+The legacy stack/unstack path survives behind
+``EngineConfig.decode_plane="stacked"`` as the equivalence oracle.
+"""
+from __future__ import annotations
+
+import bisect
+import dataclasses
+import os
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import model as M
+
+# Route row-slot block movement through the Pallas kernels
+# (kernels/gather_blocks.py / scatter_blocks.py, _hkv variants).  Default is
+# the jnp fast path: on this CPU-only container the kernels run in interpret
+# mode (Python-per-block — correct but slow); on TPU set
+# REPRO_PLANE_KERNEL=1 REPRO_KERNEL_INTERPRET=0 for the compiled DMA stream.
+USE_PALLAS_PLANE = os.environ.get("REPRO_PLANE_KERNEL", "0") == "1"
+
+
+@dataclasses.dataclass(frozen=True)
+class BucketingPolicy:
+    """Shape-bucketing policy for the jitted batched decode step.
+
+    batch_buckets: allowed padded batch-row counts; demand beyond the last
+        bucket doubles it (8 -> 16 -> 32 ...).
+    block_bucket: pool block capacity is rounded UP to a multiple of this,
+        so admitting a slightly-longer request reuses the compiled bucket
+        instead of retracing at nb, nb+1, nb+2, ...
+    """
+    batch_buckets: Tuple[int, ...] = (1, 2, 4, 8)
+    block_bucket: int = 8
+
+    def bucket_batch(self, n: int) -> int:
+        for b in self.batch_buckets:
+            if b >= n:
+                return b
+        b = self.batch_buckets[-1]
+        while b < n:
+            b *= 2
+        return b
+
+    def bucket_blocks(self, nb: int) -> int:
+        bb = self.block_bucket
+        return max(bb, -(-nb // bb) * bb)
+
+
+class _DecodeFn:
+    """One jit-compiled batched ``decode_step`` per (model config, impl).
+
+    Shared across every ``DevicePoolPlane`` (and engine instance) built for
+    the same config so jax's compilation cache is hit across engines.
+    ``trace_count`` increments via a Python side effect that only runs at
+    trace time — the exact number of XLA compilations — and
+    ``shape_signatures`` records every distinct input-shape signature seen,
+    so ``trace_count == len(shape_signatures)`` is the cache-hit invariant
+    tests assert (bounded by the bucket count for a bucketed workload).
+    """
+
+    def __init__(self, cfg, attn_impl: str):
+        self.cfg = cfg
+        self.attn_impl = attn_impl
+        self.trace_count = 0
+        self.calls = 0
+        self.shape_signatures: set = set()
+        # donation lets XLA reuse the pool buffers in place; CPU buffers are
+        # not donatable and would only emit a warning per compile
+        donate = (3,) if jax.default_backend() != "cpu" else ()
+
+        def fn(params, tokens, step_mask, state):
+            self.trace_count += 1        # trace-time side effect only
+            return M.decode_step(params, cfg, tokens, state,
+                                 attn_impl=attn_impl, return_info=True,
+                                 step_mask=step_mask)
+
+        self._jit = jax.jit(fn, donate_argnums=donate)
+
+    @staticmethod
+    def signature(state: Dict) -> Tuple:
+        return tuple((tuple(leaf.shape), str(leaf.dtype))
+                     for leaf in jax.tree.leaves(state))
+
+    def __call__(self, params, tokens, step_mask, state):
+        self.calls += 1
+        self.shape_signatures.add(self.signature(state))
+        return self._jit(params, tokens, step_mask, state)
+
+
+# keyed STRUCTURALLY (dataclass repr covers every field, nested configs
+# included) so value-equal configs share one _DecodeFn — and hence one XLA
+# compile cache — instead of leaking an entry per fresh-but-equal object.
+# Entries live for the process (bounded by the number of distinct configs).
+_DECODE_FNS: Dict[Tuple[str, str], _DecodeFn] = {}
+
+
+def decode_fn_for(cfg, attn_impl: str) -> _DecodeFn:
+    key = (repr(cfg), attn_impl)
+    if key not in _DECODE_FNS:
+        _DECODE_FNS[key] = _DecodeFn(cfg, attn_impl)
+    return _DECODE_FNS[key]
+
+
+def gather_row_blocks(pool: jax.Array, row: int, blocks) -> jax.Array:
+    """Gather `blocks` of one batch row: (B,H,NB,bs,D) -> (H,K,bs,D).
+
+    FlashH2D direction; with ``REPRO_PLANE_KERNEL=1`` this runs the Pallas
+    ``gather_blocks_hkv`` kernel (one launch, one block-granular DMA per
+    grid step), otherwise the equivalent jnp gather."""
+    idx = jnp.asarray(blocks, jnp.int32)
+    if USE_PALLAS_PLANE:
+        from repro.kernels import ops
+        return ops.gather_blocks_hkv(pool[row], idx)
+    return pool[row][:, idx]
+
+
+def scatter_row_blocks(pool: jax.Array, row: int, blocks,
+                       payload: jax.Array) -> jax.Array:
+    """Scatter `payload` (H,K,bs,D) into `blocks` of one batch row in place.
+
+    FlashD2H / H2D-restore direction: whole-block granularity, untouched
+    blocks preserved.  With ``REPRO_PLANE_KERNEL=1`` this runs the Pallas
+    ``scatter_blocks_hkv`` kernel (pool aliased in place), otherwise the
+    equivalent jnp scatter."""
+    idx = jnp.asarray(blocks, jnp.int32)
+    payload = payload.astype(pool.dtype)
+    if USE_PALLAS_PLANE:
+        from repro.kernels import ops
+        new_row = ops.scatter_blocks_hkv(pool[row], payload, idx)
+    else:
+        new_row = pool[row].at[:, idx].set(payload)
+    return pool.at[row].set(new_row)
+
+
+class DevicePoolPlane:
+    """Persistent padded decode state for one group of batched requests.
+
+    Requests whose non-pool decode state agrees in every per-request shape
+    (the engine's ``_decode_group_key``) share one plane; pools pad along
+    the block axis to the bucketed capacity.  The plane OWNS its requests'
+    decode state: after ``admit`` the engine must not keep using the
+    per-request state it passed in (``extract`` hands a copy back).
+    """
+
+    def __init__(self, cfg, policy: Optional[BucketingPolicy] = None,
+                 attn_impl: str = "ref"):
+        self.cfg = cfg
+        self.policy = policy or BucketingPolicy()
+        self.attn_impl = attn_impl
+        self.decode_fn = decode_fn_for(cfg, attn_impl)
+        self.state: Optional[Dict] = None
+        self.b_cap = 0
+        self.nb_cap = 0
+        self.rows: Dict[str, int] = {}            # req_id -> batch row
+        self.row_layout: Dict[str, List[Optional[int]]] = {}  # per-layer nb
+        self.cur_host: Dict[str, int] = {}        # host mirror of cur_len
+        self._free: List[int] = []                # sorted free rows
+        self._ever_used: set = set()
+        self.buckets_seen: set = set()            # (b_cap, nb_cap) stepped at
+        self.steps = 0
+        self.admits = 0
+        self.rows_reused = 0
+        self.blocks_dropped = 0
+        self.blocks_restored = 0
+
+    # -- capacity ----------------------------------------------------------
+
+    def _alloc(self, template: Dict, b_cap: int, nb_cap: int) -> Dict:
+        caches: List[Any] = []
+        for c in template["caches"]:
+            if M.is_pool_cache(c):
+                caches.append({
+                    key: jnp.zeros((b_cap,) + v.shape[1:2] + (nb_cap,)
+                                   + v.shape[3:], v.dtype)
+                    for key, v in c.items()})
+            else:
+                caches.append(jax.tree.map(
+                    lambda x: jnp.zeros((b_cap,) + x.shape[1:], x.dtype), c))
+        extra = (jax.tree.map(
+            lambda x: jnp.zeros((b_cap,) + x.shape[1:], x.dtype),
+            template["extra"]) if template["extra"] else {})
+        return {"caches": caches,
+                "cur_len": jnp.zeros((b_cap,), jnp.int32),
+                "extra": extra}
+
+    def _grow(self, b_cap: int, nb_cap: int) -> None:
+        db = b_cap - self.b_cap
+        dnb = nb_cap - self.nb_cap
+
+        def pad_pool(v):
+            return jnp.pad(v, ((0, db), (0, 0), (0, dnb))
+                           + ((0, 0),) * (v.ndim - 3))
+
+        def pad_rows(v):
+            return jnp.pad(v, ((0, db),) + ((0, 0),) * (v.ndim - 1))
+
+        st = self.state
+        st["caches"] = [
+            ({key: pad_pool(v) for key, v in c.items()}
+             if M.is_pool_cache(c) else jax.tree.map(pad_rows, c))
+            for c in st["caches"]]
+        st["cur_len"] = pad_rows(st["cur_len"])
+        if st["extra"]:
+            st["extra"] = jax.tree.map(pad_rows, st["extra"])
+        for r in range(self.b_cap, b_cap):
+            bisect.insort(self._free, r)
+
+    def _ensure_capacity(self, template: Dict, need_rows: int,
+                         need_nb: int) -> None:
+        b_cap = max(self.b_cap, self.policy.bucket_batch(need_rows))
+        nb_cap = max(self.nb_cap, self.policy.bucket_blocks(need_nb))
+        if self.state is None:
+            self.state = self._alloc(template, b_cap, nb_cap)
+            self._free = list(range(b_cap))
+        elif b_cap != self.b_cap or nb_cap != self.nb_cap:
+            self._grow(b_cap, nb_cap)
+        self.b_cap, self.nb_cap = b_cap, nb_cap
+
+    # -- slot lifecycle ----------------------------------------------------
+
+    def admit(self, req_id: str, state: Dict) -> int:
+        """Copy one request's DecodeState (B=1, list-mode caches) into a
+        free batch row; returns the row.  The ONLY full-pool copy in a
+        request's decode lifetime."""
+        if req_id in self.rows:
+            raise ValueError(f"{req_id} already admitted")
+        if not isinstance(state["caches"], list):
+            raise ValueError("DevicePoolPlane requires list-mode caches")
+        if int(state["cur_len"].shape[0]) != 1:
+            raise ValueError("admit expects a single-request state (B=1)")
+        nbs = [c["k"].shape[2] if M.is_pool_cache(c) else None
+               for c in state["caches"]]
+        nb_req = max((n for n in nbs if n is not None), default=0)
+        self._ensure_capacity(state, len(self.rows) + 1, nb_req)
+        row = self._free.pop(0)
+        if row in self._ever_used:
+            self.rows_reused += 1
+        self._ever_used.add(row)
+        st = self.state
+        for l, c in enumerate(state["caches"]):
+            if M.is_pool_cache(c):
+                for key, v in c.items():
+                    st["caches"][l][key] = \
+                        st["caches"][l][key].at[row, :, :nbs[l]].set(v[0])
+            else:
+                st["caches"][l] = jax.tree.map(
+                    lambda dst, src: dst.at[row].set(src[0]),
+                    st["caches"][l], c)
+        st["cur_len"] = st["cur_len"].at[row].set(state["cur_len"][0])
+        if state["extra"]:
+            st["extra"] = jax.tree.map(
+                lambda dst, src: dst.at[row].set(src[0]),
+                st["extra"], state["extra"])
+        self.rows[req_id] = row
+        self.row_layout[req_id] = nbs
+        self.cur_host[req_id] = int(state["cur_len"][0])
+        self.admits += 1
+        return row
+
+    def release(self, req_id: str) -> int:
+        """Free a finished request's row (device slots become reusable —
+        this is where a finished request's device memory is dropped)."""
+        row = self.rows.pop(req_id)
+        self.row_layout.pop(req_id)
+        self.cur_host.pop(req_id)
+        bisect.insort(self._free, row)
+        return row
+
+    # -- iteration ---------------------------------------------------------
+
+    def step(self, params: Dict, token_by_req: Dict[str, int]
+             ) -> Tuple[jax.Array, Dict, Dict[str, int]]:
+        """ONE jitted batched forward over the plane's padded rows.
+
+        token_by_req: the scheduled requests' input tokens.  Unscheduled
+        (or free) rows are masked out via ``step_mask`` — their pools,
+        recurrent states and cur_len come back unchanged, and occupancy
+        changes never retrace.  Returns (logits (B_cap, V), info,
+        {req_id: cur_len BEFORE the step}) — the pre-step lengths are the
+        positions where this step's KV landed (FlashD2H write-back needs
+        them)."""
+        tokens = np.zeros((self.b_cap,), np.int32)
+        mask = np.zeros((self.b_cap,), bool)
+        for rid, tok in token_by_req.items():
+            row = self.rows[rid]
+            tokens[row] = tok
+            mask[row] = True
+        logits, new_state, info = self.decode_fn(
+            params, jnp.asarray(tokens), jnp.asarray(mask), self.state)
+        self.state = new_state
+        self.buckets_seen.add((self.b_cap, self.nb_cap))
+        self.steps += 1
+        prev = {rid: self.cur_host[rid] for rid in token_by_req}
+        for rid in token_by_req:
+            self.cur_host[rid] += 1
+        return logits, info, prev
+
+    # -- data plane: FlashH2D/D2H wiring ----------------------------------
+
+    def pool_layers(self) -> List[int]:
+        """Model-layer indices that hold paged attn pools."""
+        if self.state is None:
+            return []
+        return [l for l, c in enumerate(self.state["caches"])
+                if M.is_pool_cache(c)]
+
+    def new_token_kv(self, req_ids: List[str], prev_lens: Dict[str, int]
+                     ) -> Dict[int, Tuple[np.ndarray, Optional[np.ndarray]]]:
+        """Read back the KV stripe this iteration appended (FlashD2H phase 1
+        source): {model_layer: (k (R,Hkv,D), v (R,Hkv,D) | None)} with rows
+        ordered like `req_ids`."""
+        bs = self.cfg.dsa.block_size
+        rows = jnp.asarray([self.rows[r] for r in req_ids], jnp.int32)
+        pos = np.asarray([prev_lens[r] for r in req_ids], np.int64)
+        blk = jnp.asarray(pos // bs, jnp.int32)
+        slot = jnp.asarray(pos % bs, jnp.int32)
+        out: Dict[int, Tuple[np.ndarray, Optional[np.ndarray]]] = {}
+        for l in self.pool_layers():
+            c = self.state["caches"][l]
+            k = np.asarray(c["k"][rows, :, blk, slot])        # (R, Hkv, D)
+            v = np.asarray(c["v"][rows, :, blk, slot]) if "v" in c else None
+            out[l] = (k, v)
+        return out
+
+    def restore_blocks(self, req_id: str, layer: int, blocks: List[int],
+                       k_host: np.ndarray,
+                       v_host: Optional[np.ndarray]) -> None:
+        """Scatter a fused FlashH2D payload (from
+        ``KVCacheManager.load_blocks_fused``) directly into this request's
+        device slots.  k_host/v_host: (Hkv, K, bs, D)."""
+        self.restore_blocks_fused(layer, {req_id: (blocks, k_host, v_host)})
+
+    def restore_blocks_fused(self, layer: int,
+                             payload_by_req: Dict[str, Tuple[List[int],
+                                                             np.ndarray,
+                                                             Any]]) -> None:
+        """Land one layer's fused FlashH2D payloads for the WHOLE batch in
+        a single pool update (mirrors the one-launch-per-layer transfer:
+        one device-buffer update per layer per iteration, not one per
+        request).  payload_by_req: {req_id: (blocks, k (Hkv,K,bs,D),
+        v | None)}."""
+        c = self.state["caches"][layer]
+        H = c["k"].shape[1]
+        rows_l: List[int] = []
+        blks_l: List[int] = []
+        ks: List[np.ndarray] = []
+        vs: List[np.ndarray] = []
+        has_v = "v" in c
+        for req_id, (blocks, k_host, v_host) in payload_by_req.items():
+            row = self.rows[req_id]
+            rows_l.extend([row] * len(blocks))
+            blks_l.extend(blocks)
+            # MLA: the host pool broadcasts the single latent head over
+            # geom.num_kv_heads; the device pool keeps one — use the first
+            ks.append(np.asarray(k_host)[:H])
+            if has_v and v_host is not None:
+                vs.append(np.asarray(v_host)[:H])
+        if not blks_l:
+            return
+        if USE_PALLAS_PLANE:
+            # kernel-demonstration route: per-row Pallas scatters
+            for req_id, (blocks, k_host, v_host) in payload_by_req.items():
+                row = self.rows[req_id]
+                c["k"] = scatter_row_blocks(c["k"], row, blocks,
+                                            jnp.asarray(k_host[:H]))
+                if has_v and v_host is not None:
+                    c["v"] = scatter_row_blocks(c["v"], row, blocks,
+                                                jnp.asarray(v_host[:H]))
+            self.blocks_restored += len(blks_l)
+            return
+        rows = jnp.asarray(rows_l, jnp.int32)
+        blks = jnp.asarray(blks_l, jnp.int32)
+        # (Hkv, K_total, bs, D) -> (K_total, Hkv, bs, D): advanced indices
+        # at axes 0 and 2 put the gathered axis first in the update shape
+        k_all = jnp.asarray(np.concatenate(ks, axis=1).transpose(1, 0, 2, 3))
+        c["k"] = c["k"].at[rows, :, blks].set(k_all.astype(c["k"].dtype))
+        if has_v and vs:
+            v_all = jnp.asarray(
+                np.concatenate(vs, axis=1).transpose(1, 0, 2, 3))
+            c["v"] = c["v"].at[rows, :, blks].set(v_all.astype(c["v"].dtype))
+        self.blocks_restored += len(blks_l)
+
+    def drop_blocks(self, req_id: str, layer: int,
+                    blocks: List[int]) -> None:
+        """Zero evicted blocks' device data (HBM eviction -> device memory
+        actually dropped).  Block METADATA is kept resident so DSA scoring
+        stays exact; re-selected blocks come back via ``restore_blocks``."""
+        row = self.rows[req_id]
+        c = self.state["caches"][layer]
+        idx = jnp.asarray(blocks, jnp.int32)
+        zero = jnp.zeros((c["k"].shape[1], len(blocks)) + c["k"].shape[3:],
+                         c["k"].dtype)
+        c["k"] = scatter_row_blocks(c["k"], row, idx, zero)
+        if "v" in c:
+            c["v"] = scatter_row_blocks(c["v"], row, idx, zero)
+        self.blocks_dropped += len(blocks)
+
+    # -- introspection -----------------------------------------------------
+
+    def extract(self, req_id: str) -> Dict:
+        """Copy one request's state back out (B=1, pools trimmed to the
+        request's own block counts) — tests/debugging, not the hot path."""
+        row = self.rows[req_id]
+        nbs = self.row_layout[req_id]
+        caches: List[Any] = []
+        for l, c in enumerate(self.state["caches"]):
+            if M.is_pool_cache(c):
+                caches.append({key: v[row:row + 1, :, :nbs[l]]
+                               for key, v in c.items()})
+            else:
+                caches.append(jax.tree.map(lambda x: x[row:row + 1], c))
+        return {"caches": caches,
+                "cur_len": self.state["cur_len"][row:row + 1],
+                "extra": (jax.tree.map(lambda x: x[row:row + 1],
+                                       self.state["extra"])
+                          if self.state["extra"] else {})}
+
+    def device_bytes(self) -> int:
+        if self.state is None:
+            return 0
+        return sum(leaf.size * leaf.dtype.itemsize
+                   for leaf in jax.tree.leaves(self.state))

@@ -76,6 +76,11 @@ class HBMCache:
         self.capacity = capacity_blocks            # in (layer, block) units
         self._lru: "collections.OrderedDict[Tuple[int,int], bool]" = \
             collections.OrderedDict()
+        # eviction keys are recorded only when a consumer drains them
+        # (engine with drop_evicted_device_blocks): unconditional recording
+        # would grow without bound on the default path
+        self.track_evictions = False
+        self._evicted: List[Tuple[int, int]] = []  # since last pop_evicted
         self.stats = TransferStats()
 
     def resident(self, layer: int, block: int) -> bool:
@@ -88,11 +93,14 @@ class HBMCache:
     def access(self, layer: int, blocks: List[int]) -> List[int]:
         """Touch `blocks` for `layer`; return the MISSING block ids (to load).
 
-        Evicts LRU entries beyond capacity.  Residency accounting ONLY
-        (hits/misses/evictions): the actual FlashH2D transfer — and its
-        h2d_* stats — happens exactly once, in the data plane
-        (``HostPool.load_blocks`` / ``KVCacheManager.load_blocks_fused``),
-        so ``total_stats`` never double-counts a transfer.
+        Units: `blocks` are block *ids* (``block_size`` tokens each); one
+        LRU entry is one (layer, block) key covering all kv heads.  Evicts
+        LRU entries beyond capacity (retrievable until the next
+        ``pop_evicted``).  Residency accounting ONLY (hits/misses/
+        evictions): the actual FlashH2D transfer — and its h2d_* stats —
+        happens exactly once, in the data plane (``HostPool.load_blocks`` /
+        ``KVCacheManager.load_blocks_fused``), so ``total_stats`` never
+        double-counts a transfer.
         """
         missing = []
         for b in blocks:
@@ -105,18 +113,29 @@ class HBMCache:
                 self.stats.misses += 1
         for b in missing:
             self._lru[(layer, b)] = True
-        while len(self._lru) > self.capacity:
-            self._lru.popitem(last=False)
-            self.stats.evictions += 1
+        self._evict_over_capacity()
         return missing
+
+    def _evict_over_capacity(self) -> None:
+        while len(self._lru) > self.capacity:
+            key = self._lru.popitem(last=False)[0]
+            if self.track_evictions:
+                self._evicted.append(key)
+            self.stats.evictions += 1
+
+    def pop_evicted(self) -> List[Tuple[int, int]]:
+        """Drain the (layer, block) keys evicted since the last call — the
+        engine zeroes these device slots when
+        ``drop_evicted_device_blocks`` is on (which also sets
+        ``track_evictions``; keys are not recorded otherwise)."""
+        out, self._evicted = self._evicted, []
+        return out
 
     def insert(self, layer: int, block: int) -> None:
         """Insert a freshly produced block (decode append) without a load."""
         self._lru[(layer, block)] = True
         self._lru.move_to_end((layer, block))
-        while len(self._lru) > self.capacity:
-            self._lru.popitem(last=False)
-            self.stats.evictions += 1
+        self._evict_over_capacity()
 
     def drop_layer(self, layer: int) -> int:
         """Evict all blocks of one layer (layer-segmented prefill §3.4)."""
@@ -146,24 +165,42 @@ class HostPool:
         self._staging: List[Tuple[int, int, np.ndarray, Optional[np.ndarray]]] = []
         self.stats = TransferStats()
 
-    def save_contiguous(self, layer: int, start_token: int, k_new: np.ndarray,
-                        v_new: Optional[np.ndarray]) -> None:
-        """Phase 1 of FlashD2H: one contiguous D2H transfer into staging.
+    def stage(self, layer: int, start_token: int, k_new: np.ndarray,
+              v_new: Optional[np.ndarray]) -> int:
+        """Append one contiguous KV stripe to the staging buffer WITHOUT
+        booking d2h stats (callers that represent one fused launch across
+        many pools — ``KVCacheManager.save_new_tokens_fused`` — account the
+        launch themselves; ``save_contiguous`` accounts per-call).
 
-        k_new/v_new: (Hkv, T, D) for T new tokens starting at start_token."""
+        k_new/v_new: (Hkv, T, D) for T new tokens starting at absolute
+        token position ``start_token``.  Bounds contract: the stripe
+        [start_token, start_token+T) must fit the pool registered at
+        ``KVCacheManager.register`` time — out-of-range stripes raise
+        ``ValueError`` immediately rather than corrupting block state.
+        Returns the stripe's byte size (both K and V)."""
         end_token = start_token + k_new.shape[1]
         max_tokens = self.num_blocks * self.geom.block_size
         if start_token < 0 or end_token > max_tokens:
             raise ValueError(
-                f"HostPool.save_contiguous: tokens [{start_token}, {end_token})"
+                f"HostPool.stage: tokens [{start_token}, {end_token})"
                 f" exceed the registered pool capacity of {max_tokens} tokens"
                 f" ({self.num_blocks} blocks x {self.geom.block_size}); "
                 f"register the request with a larger max_tokens")
-        nbytes = k_new.nbytes * (2 if v_new is not None else 1)
-        self.stats.d2h_calls += 1
-        self.stats.d2h_bytes += nbytes
         self._staging.append((layer, start_token, np.asarray(k_new),
                               None if v_new is None else np.asarray(v_new)))
+        return k_new.nbytes * (2 if v_new is not None else 1)
+
+    def save_contiguous(self, layer: int, start_token: int, k_new: np.ndarray,
+                        v_new: Optional[np.ndarray]) -> None:
+        """Phase 1 of FlashD2H: one contiguous D2H transfer into staging.
+
+        k_new/v_new: (Hkv, T, D) for T new tokens starting at start_token.
+        Books exactly one ``d2h_calls`` (the contiguous DMA) and its bytes;
+        the CPU-side block scatter is deferred to ``flush`` (which books
+        ``d2h_blocks`` only — a staged byte is never double-counted)."""
+        nbytes = self.stage(layer, start_token, k_new, v_new)
+        self.stats.d2h_calls += 1
+        self.stats.d2h_bytes += nbytes
 
     def flush(self) -> int:
         """Phase 2 of FlashD2H: CPU-side scatter of staged stripes into the
@@ -265,7 +302,17 @@ class KVCacheManager:
         over ALL requests in the iteration, so h2d_calls grows
         per-layer-per-iteration, not per-request.  Accounting lives HERE and
         only here for these transfers (``HBMCache.access`` books residency
-        only), so each moved block is counted exactly once."""
+        only), so each moved block is counted exactly once: h2d_calls in
+        fused launches, h2d_blocks in (block x kv-head) units, h2d_bytes in
+        bytes of K+V payload.
+
+        `layer` is the attention-layer ORDINAL (0..geom.num_layers-1), not
+        the model layer id; `blocks_by_req` values are block ids, each
+        bounds-checked by ``HostPool.gather`` against the pool registered
+        at ``register`` time.  Returns {req_id: (k (Hkv,K,bs,D), v|None)} —
+        under the persistent decode plane the engine scatters these
+        payloads DIRECTLY into the requests' device slots
+        (``DevicePoolPlane.restore_blocks``)."""
         out: Dict[str, Tuple[np.ndarray, Optional[np.ndarray]]] = {}
         total_blocks = 0
         total_bytes = 0
@@ -282,6 +329,34 @@ class KVCacheManager:
             self.fused_stats.h2d_blocks += total_blocks
             self.fused_stats.h2d_bytes += total_bytes
         return out
+
+    def save_new_tokens_fused(self, layer: int,
+                              kv_by_req: Dict[str, Tuple[int, np.ndarray,
+                                                         Optional[np.ndarray]]]
+                              ) -> None:
+        """ONE fused FlashD2H save of this iteration's newly generated KV
+        for `layer` across the whole decode batch (persistent-plane hot
+        path).
+
+        kv_by_req: {req_id: (start_token, k (Hkv,T,D), v or None)}.  Under
+        batched decode the per-iteration stripe is contiguous across the
+        batch, so the paper saves it with one D2H DMA per layer per
+        iteration; accordingly ``d2h_calls`` is booked ONCE here (on
+        ``fused_stats``) while each pool stages its stripe without
+        accounting (``HostPool.stage``).  The CPU-side scatter into blocks
+        still happens at each pool's ``flush``.  Keeping the host pool a
+        byte-exact superset of device KV is what makes
+        ``load_blocks_fused`` payloads safe to scatter straight into device
+        slots."""
+        total_bytes = 0
+        for req_id, (start, k, v) in kv_by_req.items():
+            pool = self.pools.get(req_id)
+            if pool is None:
+                continue
+            total_bytes += pool.stage(layer, start, k, v)
+        if total_bytes:
+            self.fused_stats.d2h_calls += 1
+            self.fused_stats.d2h_bytes += total_bytes
 
     # -- accounting --------------------------------------------------------
     def hbm_used_bytes(self) -> int:

@@ -47,3 +47,38 @@ def gather_blocks(pool: jax.Array, idx: jax.Array, *,
         out_shape=jax.ShapeDtypeStruct((K, bs, D), pool.dtype),
         interpret=interpret,
     )(idx.astype(jnp.int32), pool)
+
+
+def _gather_hkv_kernel(idx_ref, pool_ref, out_ref):
+    out_ref[...] = pool_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def gather_blocks_hkv(pool: jax.Array, idx: jax.Array, *,
+                      interpret: bool = True) -> jax.Array:
+    """Head-major fused gather: pool (H, NB, bs, D); idx (K,) int32 ->
+    (H, K, bs, D).
+
+    The per-head variant the persistent device plane
+    (``repro.core.device_pool``) uses for one batch row: the paper's
+    (H, N, D) layout (§3.2, Fig. 5) keeps each head's blocks contiguous, so
+    the grid streams one (head, block) DMA per step — all H*K fragmented
+    blocks in ONE launch."""
+    H, NB, bs, D = pool.shape
+    K = idx.shape[0]
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(H, K),
+        in_specs=[
+            pl.BlockSpec((1, 1, bs, D),
+                         lambda h, i, idx_ref: (h, idx_ref[i], 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bs, D),
+                               lambda h, i, idx_ref: (h, i, 0, 0)),
+    )
+    return pl.pallas_call(
+        _gather_hkv_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((H, K, bs, D), pool.dtype),
+        interpret=interpret,
+    )(idx.astype(jnp.int32), pool)

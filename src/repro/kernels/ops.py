@@ -13,7 +13,10 @@ import jax
 from repro.kernels.block_score import block_score as _block_score
 from repro.kernels.flash_prefill import flash_prefill as _flash_prefill
 from repro.kernels.gather_blocks import gather_blocks as _gather_blocks
+from repro.kernels.gather_blocks import gather_blocks_hkv as _gather_blocks_hkv
 from repro.kernels.scatter_blocks import scatter_blocks as _scatter_blocks
+from repro.kernels.scatter_blocks import (
+    scatter_blocks_hkv as _scatter_blocks_hkv)
 from repro.kernels.sparse_decode_attention import (
     sparse_decode_attention as _sparse_decode_attention)
 
@@ -26,6 +29,14 @@ def gather_blocks(pool, idx):
 
 def scatter_blocks(pool, new_kv, dest_blocks):
     return _scatter_blocks(pool, new_kv, dest_blocks, interpret=INTERPRET)
+
+
+def gather_blocks_hkv(pool, idx):
+    return _gather_blocks_hkv(pool, idx, interpret=INTERPRET)
+
+
+def scatter_blocks_hkv(pool, new_kv, dest_blocks):
+    return _scatter_blocks_hkv(pool, new_kv, dest_blocks, interpret=INTERPRET)
 
 
 def block_score(q, meta_min, meta_max, nb_tile: int = 128):

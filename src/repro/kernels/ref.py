@@ -17,6 +17,19 @@ def gather_blocks(pool: jax.Array, idx: jax.Array) -> jax.Array:
     return pool[idx]
 
 
+def gather_blocks_hkv(pool: jax.Array, idx: jax.Array) -> jax.Array:
+    """Head-major FlashH2D oracle: pool (H, NB, bs, D), idx (K,) ->
+    (H, K, bs, D)."""
+    return pool[:, idx]
+
+
+def scatter_blocks_hkv(pool: jax.Array, new_kv: jax.Array,
+                       dest_blocks: jax.Array) -> jax.Array:
+    """Head-major block-scatter oracle: pool (H, NB, bs, D);
+    new_kv (H, K, bs, D); dest_blocks (K,)."""
+    return pool.at[:, dest_blocks].set(new_kv)
+
+
 def scatter_blocks(pool: jax.Array, new_kv: jax.Array,
                    dest_blocks: jax.Array) -> jax.Array:
     """FlashD2H oracle.

@@ -503,13 +503,18 @@ def cp_decode_attention(cfg: ModelConfig, q, k, v, cache, cur_len, *,
 def gqa_decode_step(p: Dict[str, jax.Array], cfg: ModelConfig, x: jax.Array,
                     cache: Dict[str, jax.Array], cur_len: jax.Array,
                     *, attn_impl: str = "ref",
-                    cp_axis: Optional[str] = None
+                    cp_axis: Optional[str] = None,
+                    step_mask: Optional[jax.Array] = None
                     ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
     """One decode token.  x: (B, d); cur_len: (B,) tokens already cached.
 
     Select-then-compute (paper Fig. 2): write new KV -> update metadata ->
     score blocks -> top-k -> block-sparse attention.
     cp_axis: context-parallel mesh axis name (pool blocks sharded) or None.
+    step_mask: optional (B,) bool — rows where False keep their pool/meta
+    byte-for-byte unchanged (the persistent device plane steps a padded
+    batch whose inactive rows must not mutate; attention still computes
+    garbage for those rows, which the caller discards).
     """
     B, d = x.shape
     Hq, Hkv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
@@ -533,9 +538,16 @@ def gqa_decode_step(p: Dict[str, jax.Array], cfg: ModelConfig, x: jax.Array,
         return out, new_cache, sel
 
     bs = cfg.dsa.block_size
-    k_pool = _append_to_pool(cache["k"], k, cur_len, bs)
-    v_pool = _append_to_pool(cache["v"], v, cur_len, bs)
-    meta = _update_meta(cache["meta"], k, cur_len, cfg.dsa)
+    if step_mask is None:
+        k_pool = _append_to_pool(cache["k"], k, cur_len, bs)
+        v_pool = _append_to_pool(cache["v"], v, cur_len, bs)
+        meta = _update_meta(cache["meta"], k, cur_len, cfg.dsa)
+    else:
+        blk, slot = cur_len // bs, cur_len % bs
+        k_pool = _append_masked(cache["k"], k, blk, slot, step_mask)
+        v_pool = _append_masked(cache["v"], v, blk, slot, step_mask)
+        meta = _update_meta_masked(cache["meta"], k, blk, slot, step_mask,
+                                   cfg.dsa)
     new_len = cur_len + 1
 
     sel = None
@@ -603,10 +615,12 @@ def mla_self_attention(p: Dict[str, jax.Array], cfg: ModelConfig, x: jax.Array,
 
 def mla_decode_step(p: Dict[str, jax.Array], cfg: ModelConfig, x: jax.Array,
                     cache: Dict[str, jax.Array], cur_len: jax.Array,
-                    *, attn_impl: str = "ref"):
+                    *, attn_impl: str = "ref",
+                    step_mask: Optional[jax.Array] = None):
     """Absorbed-form MLA decode: the latent cache behaves as a single KV head
     with key dim (kv_lora_rank + rope) and value = latent (kv_lora_rank).
     DSA metadata lives in latent space — beyond-paper extension (DESIGN §4).
+    step_mask: see ``gqa_decode_step`` — False rows leave the cache unchanged.
     """
     m = cfg.mla
     B, d = x.shape
@@ -632,8 +646,16 @@ def mla_decode_step(p: Dict[str, jax.Array], cfg: ModelConfig, x: jax.Array,
     latent = jnp.concatenate([c_kv_n, k_rope], axis=-1)     # (B, lat+dr)
 
     bs = cfg.dsa.block_size
-    k_pool = _append_to_pool(cache["k"], latent[:, None, :], cur_len, bs)
-    meta = _update_meta(cache["meta"], latent[:, None, :], cur_len, cfg.dsa)
+    if step_mask is None:
+        k_pool = _append_to_pool(cache["k"], latent[:, None, :], cur_len, bs)
+        meta = _update_meta(cache["meta"], latent[:, None, :], cur_len,
+                            cfg.dsa)
+    else:
+        blk, slot = cur_len // bs, cur_len % bs
+        k_pool = _append_masked(cache["k"], latent[:, None, :], blk, slot,
+                                step_mask)
+        meta = _update_meta_masked(cache["meta"], latent[:, None, :], blk,
+                                   slot, step_mask, cfg.dsa)
     new_len = cur_len + 1
 
     scale = 1.0 / ((dn + dr) ** 0.5)

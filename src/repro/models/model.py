@@ -654,26 +654,47 @@ def unstack_decode_states(state: Dict,
 # Decode step
 # ---------------------------------------------------------------------------
 
+def _mask_state(new, old, step_mask: jax.Array):
+    """Per-leaf select: keep `old` wherever step_mask is False (row axis 0)."""
+    def sel(n, o):
+        m = step_mask.reshape((step_mask.shape[0],) + (1,) * (n.ndim - 1))
+        return jnp.where(m, n, o)
+    return jax.tree.map(sel, new, old)
+
+
 def _decode_layer(p: Dict, cfg: ModelConfig, kind: str, x: jax.Array,
-                  cache, cur_len: jax.Array, enc_kv, attn_impl: str):
-    """One decode layer.  Returns (x, new_cache, sel_or_None)."""
+                  cache, cur_len: jax.Array, enc_kv, attn_impl: str,
+                  step_mask: Optional[jax.Array] = None):
+    """One decode layer.  Returns (x, new_cache, sel_or_None).
+
+    step_mask (B,) bool: rows where False must leave `cache` unchanged —
+    paged pools use masked scatter at the source (``attn._append_masked``),
+    recurrent states are reverted leaf-wise."""
     sel = None
     if kind == "rwkv":
+        old = cache
         h, cache = rwkv_mod.rwkv_time_mix_step(
             p["rwkv"], cfg, _norm(cfg, p["ln1"], x), cache)
         x = x + h
         h, cache = rwkv_mod.rwkv_channel_mix_step(
             p["rwkv"], _norm(cfg, p["ln2"], x), cache)
+        if step_mask is not None:
+            cache = _mask_state(cache, old, step_mask)
         return x + h, cache, sel
     h_in = _norm(cfg, p["attn_norm"], x)
     if kind == "mamba":
+        old = cache
         h, cache = mamba_mod.mamba_decode_step(p["mamba"], cfg, h_in, cache)
+        if step_mask is not None:
+            cache = _mask_state(cache, old, step_mask)
     elif cfg.attention_type == "mla":
         h, cache, sel = attn.mla_decode_step(p["attn"], cfg, h_in, cache,
-                                             cur_len, attn_impl=attn_impl)
+                                             cur_len, attn_impl=attn_impl,
+                                             step_mask=step_mask)
     else:
         h, cache, sel = attn.gqa_decode_step(p["attn"], cfg, h_in, cache,
-                                             cur_len, attn_impl=attn_impl)
+                                             cur_len, attn_impl=attn_impl,
+                                             step_mask=step_mask)
     x = x + h
     if enc_kv is not None and "cross" in p:
         h = attn.cross_decode_step(p["cross"], cfg,
@@ -718,12 +739,21 @@ def _decode_scan(params: Dict, cfg: ModelConfig, x: jax.Array, state: Dict,
 
 def decode_step(params: Dict, cfg: ModelConfig, tokens: jax.Array,
                 state: Dict, *, attn_impl: str = "ref",
-                return_info: bool = False):
+                return_info: bool = False,
+                step_mask: Optional[jax.Array] = None):
     """tokens: (B,) int32 — one new token per request.
 
     With return_info=True also returns {"selected": {layer: (B,Hkv,K)}} —
     the DSA block selections the serving engine feeds to the LRU cache and
-    the working-set estimator.  Stacked caches take the scan fast path."""
+    the working-set estimator.  Stacked caches take the scan fast path.
+
+    step_mask: optional (B,) bool.  Rows where False are "parked": their
+    caches (paged pools, metadata, recurrent states) and cur_len come back
+    byte-for-byte unchanged, while the forward still runs at the full padded
+    batch shape.  This is what lets the persistent device plane
+    (``repro.core.device_pool``) jit ONE bucketed batch shape and step an
+    arbitrary subset of resident requests per iteration.  Only supported
+    with list-mode caches (the serving engine's representation)."""
     B = tokens.shape[0]
     cur_len = state["cur_len"]
     x = params["embed"][tokens]                              # (B, d)
@@ -731,6 +761,8 @@ def decode_step(params: Dict, cfg: ModelConfig, tokens: jax.Array,
 
     info: Dict[str, Any] = {"selected": {}}
     if isinstance(state["caches"], dict):                    # stacked/scan
+        if step_mask is not None:
+            raise ValueError("step_mask requires list-mode caches")
         x, new_caches, sel_stacked = _decode_scan(params, cfg, x, state,
                                                   attn_impl)
         if sel_stacked is not None and return_info:
@@ -743,13 +775,15 @@ def decode_step(params: Dict, cfg: ModelConfig, tokens: jax.Array,
             kind = layer_kind(cfg, i)
             x, cache, sel = _decode_layer(
                 p, cfg, kind, x, state["caches"][i], cur_len,
-                index_enc_kvs(enc_kvs, i), attn_impl)
+                index_enc_kvs(enc_kvs, i), attn_impl, step_mask=step_mask)
             if sel is not None:
                 info["selected"][i] = sel
             new_caches.append(cache)
 
     logits = lm_head(params, cfg, x[:, None, :])[:, 0]
-    new_state = {"caches": new_caches, "cur_len": cur_len + 1,
+    new_len = (cur_len + 1 if step_mask is None
+               else cur_len + step_mask.astype(jnp.int32))
+    new_state = {"caches": new_caches, "cur_len": new_len,
                  "extra": state["extra"]}
     if return_info:
         return logits, new_state, info

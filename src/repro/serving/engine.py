@@ -4,16 +4,24 @@ This is the system the paper builds: a vLLM-style continuous-batching engine
 with
 
   * dynamic sparse attention decode (select-then-compute, §2.2) executed as
-    ONE batched model forward per iteration: per-request KV pools stack into
-    a shared padded paged pool and `decode_step` runs at B = |decode batch|
-    with per-request cur_len (set ``batched_decode=False`` for the legacy
-    per-request loop),
+    ONE batched model forward per iteration over a PERSISTENT shared device
+    pool (``repro.core.device_pool.DevicePoolPlane``): requests are admitted
+    into padded pool rows once, stepped via a jit-compiled bucketed
+    `decode_step` (one compile per shape bucket, zero per-iteration
+    stack/unstack copies), and released when they finish so later requests
+    reuse their slots.  ``decode_plane="stacked"`` keeps the legacy
+    pad+concat-every-iteration path as the equivalence oracle;
+    ``batched_decode=False`` is the per-request loop,
   * a hierarchical HBM–DRAM KV manager with per-request LRU HBM caches and
     host pools (§3.1 / §3.2 — FlashH2D/D2H accounting on every transfer;
     decode misses load through ONE fused FlashH2D launch per layer per
-    iteration),
+    iteration whose payloads scatter DIRECTLY into the device plane's
+    slots; newly generated KV writes back to DRAM with one fused FlashD2H
+    save per layer per iteration),
   * working-set-aware batch size control (Algorithm 1, §3.3),
   * layer-segmented OR chunked prefill (§3.4 vs the baseline).
+
+See docs/architecture.md for the decode data plane end-to-end.
 
 The CONTROL PLANE is fully real (scheduling, admission, caching, transfer
 accounting, prefill segmentation); the MODEL COMPUTE is fully real (actual
@@ -37,6 +45,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import dsa as dsa_mod
+from repro.core.device_pool import BucketingPolicy, DevicePoolPlane
 from repro.core.kv_cache import KVCacheManager, KVGeometry, TransferStats
 from repro.core.layer_prefill import LayerPrefillState, plan_segments
 from repro.core.scheduler import BatchPlan, Scheduler, SchedulerConfig
@@ -63,6 +72,26 @@ class EngineConfig:
     seed: int = 0
     batched_decode: bool = True              # ONE decode_step per iteration
                                              # (False: legacy B=1 loop)
+    decode_plane: str = "persistent"         # "persistent": requests live in
+                                             # a DevicePoolPlane (jitted,
+                                             # bucketed, zero per-iteration
+                                             # stack/unstack); "stacked":
+                                             # legacy pad+concat every
+                                             # iteration (equivalence oracle)
+    bucketing: BucketingPolicy = dataclasses.field(
+        default_factory=BucketingPolicy)     # persistent-plane shape buckets
+    decode_write_back: bool = True           # FlashD2H: save newly generated
+                                             # KV to the host pool each
+                                             # iteration (one fused d2h call
+                                             # per layer), keeping DRAM a
+                                             # superset of device KV
+    drop_evicted_device_blocks: bool = False
+    # True: HBM-evicted blocks are physically zeroed on device and only
+    # restored (from the host pool, via the fused H2D gather) AFTER the
+    # forward that re-selected them — a real memory drop whose restore
+    # latency is modeled, but which changes outputs under eviction pressure
+    # because select and compute are fused in one launch.  Leave False for
+    # oracle-exact decode; see docs/architecture.md.
 
 
 @dataclasses.dataclass
@@ -79,6 +108,9 @@ class _ReqState:
     last_logits: Optional[jax.Array] = None
     out_tokens: List[int] = dataclasses.field(default_factory=list)
     num_blocks: int = 0
+    group_key: Optional[Tuple] = None               # batched-decode grouping
+                                                    # (cached before the plane
+                                                    # takes state ownership)
 
 
 class ServingEngine:
@@ -90,6 +122,26 @@ class ServingEngine:
         self.cfg = cfg
         self.eng = eng
         self.hw = hw
+        if eng.decode_plane not in ("persistent", "stacked"):
+            raise ValueError(f"unknown decode_plane {eng.decode_plane!r}; "
+                             f"expected 'persistent' or 'stacked'")
+        if eng.prefill_mode == "chunked" and cfg.attention_type == "mla":
+            # the chunked baseline carries dense (k, v) context between
+            # chunks; MLA's latent cache has no chunked-context path yet
+            raise NotImplementedError(
+                "chunked prefill does not support MLA models; use "
+                "prefill_mode='layer_segmented'")
+        if eng.drop_evicted_device_blocks and not eng.decode_write_back:
+            raise ValueError(
+                "drop_evicted_device_blocks requires decode_write_back: "
+                "restores come from the host pool, which is only a superset "
+                "of device KV when decode write-back is on")
+        if eng.drop_evicted_device_blocks and not (
+                eng.batched_decode and eng.decode_plane == "persistent"):
+            raise ValueError(
+                "drop_evicted_device_blocks only acts on the persistent "
+                "device plane (batched_decode=True, "
+                "decode_plane='persistent')")
         self.mc = cm.ModelCost.from_config(cfg)
         self.rng = np.random.default_rng(eng.seed)
 
@@ -116,12 +168,41 @@ class ServingEngine:
         self.prefill_hbm_peak_tokens: int = 0    # Fig. 16a rationale metric
         self.decode_step_calls = 0               # model forwards (decode)
         self.decode_tokens = 0                   # tokens those calls produced
+        self.stack_calls = 0                     # full-pool stack/unstack
+                                                 # round-trips (0 on the
+                                                 # persistent plane)
+        self.planes: Dict[Tuple, DevicePoolPlane] = {}   # group_key -> plane
+        self._req_plane: Dict[str, DevicePoolPlane] = {}
+        # model layer -> attn-layer ordinal (hot path: per layer per decode
+        # iteration) and its inverse (maps HBMCache eviction keys back to
+        # plane cache indices), both precomputed once
+        self._layer_to_lidx: Dict[int, int] = {}
+        self._lidx_to_layer: Dict[int, int] = {}
+        n = 0
+        for i in range(cfg.num_layers):
+            lidx = min(n, self.geom.num_layers - 1)
+            self._layer_to_lidx[i] = lidx
+            if M.layer_kind(cfg, i) == "attn":
+                self._lidx_to_layer.setdefault(lidx, i)
+                n += 1
 
     # ------------------------------------------------------------------
     # Request intake
     # ------------------------------------------------------------------
     def submit(self, req: Request, tokens: Optional[np.ndarray] = None,
                **inputs_extra) -> None:
+        """Register a request with the engine (it joins the scheduler queue
+        at ``req.arrival_time``, in engine-clock SECONDS).
+
+        tokens: prompt token ids, length ``req.prompt_len`` (random ids are
+        drawn when omitted).  inputs_extra: frontend tensors (``frames`` for
+        whisper, ``patch_embeds`` for VLMs), leading batch axis 1.
+
+        Capacity contract: the KV manager registers a host pool sized for
+        ``prompt_len + max_new_tokens`` (+ patches) TOKENS — every later
+        stage (FlashD2H staging, fused gathers, device-plane restores)
+        bounds-checks block ranges against that registration, so exceeding
+        it raises instead of corrupting pool state."""
         if tokens is None:
             tokens = self.rng.integers(
                 4, self.cfg.vocab_size, size=req.prompt_len).astype(np.int32)
@@ -136,6 +217,8 @@ class ServingEngine:
         self._pending.append(st.req)
         self._pending.sort(key=lambda r: r.arrival_time)
         self.kv_mgr.register(req.req_id, total, self.eng.hbm_blocks_per_request)
+        if self.eng.drop_evicted_device_blocks:
+            self.kv_mgr.caches[req.req_id].track_evictions = True
 
     def _admit_arrivals(self) -> None:
         while self._pending and self._pending[0].arrival_time <= self.now:
@@ -223,12 +306,9 @@ class ServingEngine:
         return False
 
     def _attn_layer_index(self, model_layer: int) -> int:
-        """Map model layer id -> attention-layer ordinal (geom.num_layers)."""
-        n = 0
-        for i in range(model_layer):
-            if M.layer_kind(self.cfg, i) == "attn":
-                n += 1
-        return min(n, self.geom.num_layers - 1)
+        """Map model layer id -> attention-layer ordinal (geom.num_layers).
+        Precomputed in __init__ — called per layer per decode iteration."""
+        return self._layer_to_lidx[model_layer]
 
     def _kv_to_layer_cache(self, st: _ReqState, kv_out: Tuple):
         cfg = self.cfg
@@ -297,6 +377,7 @@ class ServingEngine:
             st.last_logits = M.lm_head(self.params, cfg, h[:, -1:, :])[:, 0]
             # build the decode state from accumulated ctx
             caches = []
+            host = self.kv_mgr.pools.get(r.req_id)
             for l in range(cfg.num_layers):
                 kind = M.layer_kind(cfg, l)
                 if kind == "attn" and cfg.attention_type != "mla":
@@ -304,8 +385,20 @@ class ServingEngine:
                     kp, meta = M._kv_to_pool(cfg, k, st.num_blocks, jnp.float32)
                     vp, _ = M._kv_to_pool(cfg, v, st.num_blocks, jnp.float32)
                     caches.append({"k": kp, "v": vp, "meta": meta})
+                    if host is not None:
+                        # FlashD2H: the chunked baseline also leaves a DRAM
+                        # copy of the prompt KV (one contiguous save per
+                        # layer) so decode-time H2D restores stay exact
+                        host.save_contiguous(
+                            self._attn_layer_index(l), 0,
+                            np.transpose(np.asarray(k[0], np.float32),
+                                         (1, 0, 2)),
+                            np.transpose(np.asarray(v[0], np.float32),
+                                         (1, 0, 2)))
                 else:
                     caches.append(st.chunk_rec[l])
+            if host is not None:
+                host.flush()
             st.decode_state = {
                 "caches": caches,
                 "cur_len": jnp.full((1,), r.prompt_len, jnp.int32),
@@ -326,36 +419,67 @@ class ServingEngine:
         return int(self.rng.choice(len(p), p=p))
 
     def _account_selections(self, sts: List[_ReqState],
-                            selected: Dict[int, Any]) -> int:
+                            selected: Dict[int, Any],
+                            plane: Optional[DevicePoolPlane] = None) -> int:
         """DSA selections -> LRU residency, fused FlashH2D loads, and the
-        working-set estimator.  `selected[l]` is (B, Hkv, K) over the batch
-        rows of `sts`.  For each layer, every request's misses are loaded
-        by ONE fused launch (`KVCacheManager.load_blocks_fused`) — h2d_calls
-        scale per-layer-per-iteration, not per-request.  Returns blocks
-        loaded."""
+        working-set estimator.
+
+        `selected[l]` is (B, Hkv, K); batch row `b` belongs to ``sts[b]``
+        unless `plane` is given, in which case rows follow the plane's slot
+        assignment.  For each layer, every request's misses are loaded by
+        ONE fused launch (`KVCacheManager.load_blocks_fused`) — h2d_calls
+        scale per-layer-per-iteration, not per-request — and, on the
+        persistent plane, the gathered payloads are scattered DIRECTLY into
+        the requests' device slots (`DevicePoolPlane.restore_blocks`).
+        With ``drop_evicted_device_blocks`` the blocks the LRU evicted this
+        iteration are then zeroed on device.  Returns blocks loaded."""
         loads = 0
         sel_pairs: Dict[str, List[Tuple[int, int]]] = \
+            {st.req.req_id: [] for st in sts}
+        evicted: Dict[str, List[Tuple[int, int]]] = \
             {st.req.req_id: [] for st in sts}
         for l in sorted(selected):
             sel = np.asarray(selected[l])
             lidx = self._attn_layer_index(l)
             missing_by_req: Dict[str, List[int]] = {}
             for b, st in enumerate(sts):
-                blocks = sorted(set(int(x) for x in sel[b].ravel()))
+                row = b if plane is None else plane.rows[st.req.req_id]
+                blocks = sorted(set(int(x) for x in sel[row].ravel()))
                 sel_pairs[st.req.req_id].extend((lidx, x) for x in blocks)
                 cache = self.kv_mgr.caches.get(st.req.req_id)
                 if cache is None:
                     continue
                 missing = cache.access(lidx, blocks)
+                if self.eng.drop_evicted_device_blocks:
+                    evicted[st.req.req_id].extend(cache.pop_evicted())
                 if missing:
                     missing_by_req[st.req.req_id] = missing
                     loads += len(missing)
             if missing_by_req:
-                # gathered host blocks are not yet consumed: the device pool
-                # already holds all KV in this repro, so the fused gather
-                # models the transfer (bytes/calls feed the cost model);
-                # wiring it into device pools is a ROADMAP follow-up
-                self.kv_mgr.load_blocks_fused(lidx, missing_by_req)
+                payloads = self.kv_mgr.load_blocks_fused(lidx, missing_by_req)
+                if plane is not None and self.eng.decode_write_back:
+                    # FlashH2D lands in the device slots, not a side buffer
+                    # — ONE fused scatter per layer covering every request.
+                    # Gated on write-back: only then is the host pool a
+                    # superset of device KV (scattering stale host data
+                    # over decode-appended tokens would corrupt the pool).
+                    plane.restore_blocks_fused(
+                        l, {rid: (missing_by_req[rid], k, v)
+                            for rid, (k, v) in payloads.items()})
+        if plane is not None and self.eng.drop_evicted_device_blocks:
+            for st in sts:
+                cache = self.kv_mgr.caches.get(st.req.req_id)
+                if cache is None:
+                    continue
+                by_layer: Dict[int, List[int]] = {}
+                for elidx, blk in evicted[st.req.req_id]:
+                    if not cache.resident(elidx, blk):   # not re-loaded since
+                        by_layer.setdefault(elidx, []).append(blk)
+                for elidx, blks in by_layer.items():
+                    layer = self._lidx_to_layer.get(elidx)
+                    if layer is not None:
+                        plane.drop_blocks(st.req.req_id, layer,
+                                          sorted(set(blks)))
         for st in sts:
             if sel_pairs[st.req.req_id]:
                 self.scheduler.observe_selection(st.req,
@@ -387,14 +511,16 @@ class ServingEngine:
                      for leaf in jax.tree.leaves(extra))
 
     def _decode_batch(self, sts: List[_ReqState]) -> int:
-        """Tentpole hot path: ONE batched model forward for every running
-        decode request.  Per-request KV pools stack into a shared padded
-        paged pool, `decode_step` runs at B=len(sts) with per-request
-        cur_len, and DSA selection comes back as one (B, Hkv, K) tensor per
-        layer.  Returns blocks loaded."""
+        """Legacy batched path (``decode_plane="stacked"``): ONE batched
+        model forward, but per-request KV pools are re-stacked into a fresh
+        padded paged pool and unstacked again EVERY iteration — an
+        O(batch x pool) device copy per generated token.  Kept as the
+        equivalence oracle for the persistent plane.  Returns blocks
+        loaded."""
         toks = jnp.asarray([st.out_tokens[-1] for st in sts], jnp.int32)
         batched, layout = M.stack_decode_states(
             [st.decode_state for st in sts])
+        self.stack_calls += 1                  # full-pool stack + unstack
         logits, new_state, info = M.decode_step(
             self.params, self.cfg, toks, batched,
             attn_impl=self.eng.attn_impl, return_info=True)
@@ -407,11 +533,77 @@ class ServingEngine:
             st.out_tokens.append(self._sample(st))
         return self._account_selections(sts, info["selected"])
 
+    def _decode_batch_persistent(self, key: Tuple,
+                                 sts: List[_ReqState]) -> int:
+        """Tentpole hot path: requests live in a persistent
+        ``DevicePoolPlane`` — admitted once, stepped via ONE jitted bucketed
+        forward per iteration with zero per-iteration stack/unstack copies,
+        released when finished (slots reused by later admissions).  Newly
+        generated KV is written back to the host pool (fused FlashD2H) and
+        fused FlashH2D payloads land directly in device slots.  Returns
+        blocks loaded."""
+        plane = self.planes.get(key)
+        if plane is None:
+            plane = self.planes[key] = DevicePoolPlane(
+                self.cfg, self.eng.bucketing, attn_impl=self.eng.attn_impl)
+        for st in sts:
+            rid = st.req.req_id
+            if rid not in plane.rows:
+                plane.admit(rid, st.decode_state)
+                st.decode_state = None           # the plane owns it now
+                self._req_plane[rid] = plane
+        tok_by_req = {st.req.req_id: st.out_tokens[-1] for st in sts}
+        logits, info, prev = plane.step(self.params, tok_by_req)
+        self.decode_step_calls += 1
+        self.decode_tokens += len(sts)
+        if self.eng.decode_write_back:
+            self._write_back_new_kv(plane, sts, prev)
+        for st in sts:
+            row = plane.rows[st.req.req_id]
+            st.last_logits = logits[row:row + 1]
+            st.out_tokens.append(self._sample(st))
+        return self._account_selections(sts, info["selected"], plane=plane)
+
+    def _write_back_new_kv(self, plane: DevicePoolPlane,
+                           sts: List[_ReqState],
+                           prev: Dict[str, int]) -> None:
+        """FlashD2H decode save: this iteration's appended KV goes to the
+        host pools with ONE fused d2h call per attention layer, keeping
+        DRAM a byte-exact superset of device KV (the invariant that makes
+        H2D restores safe to scatter straight into device slots)."""
+        req_ids = [st.req.req_id for st in sts]
+        payload = plane.new_token_kv(req_ids, prev)
+        for l, (k, v) in payload.items():
+            lidx = self._attn_layer_index(l)
+            kv_by_req = {
+                rid: (prev[rid], k[i][:, None, :],
+                      None if v is None else v[i][:, None, :])
+                for i, rid in enumerate(req_ids)}
+            self.kv_mgr.save_new_tokens_fused(lidx, kv_by_req)
+        for rid in req_ids:
+            pool = self.kv_mgr.pools.get(rid)
+            if pool is not None:
+                pool.flush()
+
     # ------------------------------------------------------------------
     # Iteration
     # ------------------------------------------------------------------
     def step(self) -> Optional[BatchPlan]:
-        """Run one hybrid batch.  Returns the executed plan (None if idle)."""
+        """Run ONE engine iteration (hybrid batch).  Returns the executed
+        plan, or None when no work remains.
+
+        Order within the iteration: admit arrivals -> schedule (Algorithm 1
+        working-set admission) -> prefill segments (layer-segmented prefill
+        FlashD2H-saves each layer's KV to DRAM and evicts it from HBM) ->
+        batched decode forward -> FlashD2H write-back of the new KV ->
+        sample -> DSA selection accounting (LRU residency; misses load via
+        ONE fused FlashH2D per layer, landing in the device plane's slots)
+        -> finish/release -> charge time.
+
+        Time is charged from the analytic cost model in engine-clock
+        seconds (``charge_real_time=True`` uses wall clock); transfer stats
+        are in bytes/calls/blocks with each moved block counted exactly
+        once (see ``KVCacheManager``)."""
         self._admit_arrivals()
         plan = self.scheduler.schedule()
         if not plan.decode_reqs and not plan.prefill_reqs:
@@ -468,9 +660,14 @@ class ServingEngine:
             groups: Dict[Tuple, List[_ReqState]] = {}
             for req in plan.decode_reqs:
                 st = self.states[req.req_id]
-                groups.setdefault(self._decode_group_key(st), []).append(st)
-            for sts in groups.values():
-                iter_loads += self._decode_batch(sts)
+                if st.group_key is None:
+                    st.group_key = self._decode_group_key(st)
+                groups.setdefault(st.group_key, []).append(st)
+            for key, sts in groups.items():
+                if self.eng.decode_plane == "persistent":
+                    iter_loads += self._decode_batch_persistent(key, sts)
+                else:
+                    iter_loads += self._decode_batch(sts)
         else:
             for req in plan.decode_reqs:
                 st = self.states[req.req_id]
@@ -483,6 +680,9 @@ class ServingEngine:
                 req.finish_time = self.now
                 self.scheduler.finish_request(req)
                 self.kv_mgr.release(req.req_id)
+                plane = self._req_plane.pop(req.req_id, None)
+                if plane is not None:
+                    plane.release(req.req_id)   # device slots reusable
 
         # --- charge time -------------------------------------------------
         if self.eng.charge_real_time:
@@ -511,6 +711,9 @@ class ServingEngine:
         return plan
 
     def run(self, max_iters: int = 10_000) -> ServingMetrics:
+        """Step until idle (every submitted request finished) or
+        ``max_iters`` iterations, then return aggregate metrics (TTFT/TBT
+        in engine-clock seconds, token throughput in tokens/s)."""
         for _ in range(max_iters):
             if self.step() is None:
                 break

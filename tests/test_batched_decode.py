@@ -1,5 +1,7 @@
 """Batched multi-request decode: equivalence with the sequential loop,
-padded-batch stack/unstack invariants, and fused FlashH2D call scaling."""
+padded-batch stack/unstack invariants, fused FlashH2D call scaling, and the
+persistent DevicePoolPlane hot path (slot reuse, bounded jit retraces,
+zero per-iteration stack/unstack, FlashD2H write-back coherence)."""
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -8,7 +10,7 @@ import pytest
 from repro.models import attention as attn
 from repro.models import model as M
 from repro.serving.engine import EngineConfig, ServingEngine
-from repro.serving.request import Request
+from repro.serving.request import Phase, Request
 
 
 def _run_engine(cfg, params, batched, prompts, gen=5, seed=7, **kw):
@@ -147,6 +149,117 @@ def test_batched_decode_groups_by_encoder_length(smoke_setup):
     assert toks_b == toks_s
     # the two S_enc=16 requests share a forward; S_enc=24 gets its own
     assert e_b.decode_step_calls < e_s.decode_step_calls
+
+
+def test_persistent_matches_stacked_oracle(smoke_setup, mixed_runs):
+    """Acceptance: greedy outputs of the persistent plane (the default)
+    match the legacy stack/unstack path on the same workload."""
+    cfg, params = smoke_setup("qwen2-0.5b")
+    (e_p, toks_p), _ = mixed_runs                 # persistent (default)
+    e_st, toks_st = _run_engine(cfg, params, True, (48, 96, 72),
+                                decode_plane="stacked")
+    assert toks_p == toks_st
+    # the persistent path never stacks/unstacks; the legacy path does every
+    # decode iteration
+    assert e_p.stack_calls == 0
+    assert e_st.stack_calls > 0
+    assert e_st.stack_calls == e_st.decode_step_calls
+
+
+def test_persistent_engine_retraces_bounded_by_buckets(mixed_runs):
+    """jit retrace count == distinct shape signatures (every repeat shape
+    is a compile-cache hit), and the engine only ever steps at policy
+    bucket shapes — so compiles are bounded by the bucket grid, not the
+    iteration count."""
+    (e_p, _), _ = mixed_runs
+    assert e_p.eng.decode_plane == "persistent"
+    [plane] = e_p.planes.values()
+    fn = plane.decode_fn
+    # exact cache-hit invariant: one XLA trace per distinct input shape
+    assert fn.trace_count == len(fn.shape_signatures)
+    pol = e_p.eng.bucketing
+    assert plane.buckets_seen                 # the plane actually stepped
+    for b_cap, nb_cap in plane.buckets_seen:
+        assert b_cap == pol.bucket_batch(b_cap)       # a policy batch bucket
+        assert nb_cap % pol.block_bucket == 0         # a block-cap bucket
+    # steady state: strictly fewer distinct buckets than iterations, i.e.
+    # most iterations were compile-cache hits
+    assert len(plane.buckets_seen) < plane.steps
+
+
+def test_plane_slot_reuse_mid_batch(smoke_setup):
+    """A request finishing mid-batch frees its device slots; a later
+    arrival reuses them; greedy outputs still match the sequential
+    oracle."""
+    cfg, params = smoke_setup("qwen2-0.5b")
+
+    def run(batched):
+        eng = ServingEngine(params, cfg, EngineConfig(
+            chunk_size=64, r_max=2, batched_decode=batched))
+        rng = np.random.default_rng(11)
+        reqs = [Request(prompt_len=48, max_new_tokens=3),       # finishes 1st
+                Request(prompt_len=48, max_new_tokens=10),
+                Request(prompt_len=48, max_new_tokens=4,        # arrives late
+                        arrival_time=1e-6)]
+        for r in reqs:
+            eng.submit(r, tokens=rng.integers(4, cfg.vocab_size,
+                                              r.prompt_len).astype(np.int32))
+        eng.run()
+        return eng, [eng.states[r.req_id].out_tokens for r in reqs]
+
+    e_p, toks_p = run(True)
+    e_s, toks_s = run(False)
+    assert toks_p == toks_s
+    [plane] = e_p.planes.values()
+    assert plane.admits == 3
+    assert plane.rows_reused >= 1        # late request reused a freed slot
+    assert plane.b_cap <= 2              # reuse, not growth
+    assert len(plane.rows) == 0          # all slots freed at the end
+
+
+def test_decode_write_back_keeps_host_pool_coherent(smoke_setup):
+    """FlashD2H write-back: after decode iterations, the host pool holds
+    the decode-appended KV byte-for-byte equal to the device plane slots —
+    the invariant that makes fused H2D restores safe to scatter straight
+    into device memory."""
+    cfg, params = smoke_setup("qwen2-0.5b")
+    eng = ServingEngine(params, cfg, EngineConfig(chunk_size=64, r_max=2))
+    r = Request(prompt_len=48, max_new_tokens=8)
+    eng.submit(r, tokens=np.arange(5, 53, dtype=np.int32))
+    for _ in range(30):
+        if r.generated >= 5:
+            break
+        eng.step()
+    assert r.generated >= 5 and r.phase != Phase.FINISHED
+    [plane] = eng.planes.values()
+    st = plane.extract(r.req_id)
+    host = eng.kv_mgr.pools[r.req_id]
+    bs = cfg.dsa.block_size
+    n_dec = int(st["cur_len"][0]) - r.prompt_len
+    assert n_dec >= 1
+    for l in plane.pool_layers():
+        lidx = eng._attn_layer_index(l)
+        for pos in range(r.prompt_len, r.prompt_len + n_dec):
+            blk, slot = pos // bs, pos % bs
+            np.testing.assert_array_equal(
+                host.k[lidx, :, blk, slot],
+                np.asarray(st["caches"][l]["k"][0, :, blk, slot]))
+            np.testing.assert_array_equal(
+                host.v[lidx, :, blk, slot],
+                np.asarray(st["caches"][l]["v"][0, :, blk, slot]))
+
+
+def test_drop_evicted_device_blocks_runs_and_drops(smoke_setup):
+    """With the true-drop knob on, HBM evictions physically zero device
+    blocks and re-selections restore them; generation completes."""
+    cfg, params = smoke_setup("qwen2-0.5b")
+    eng, toks = _run_engine(cfg, params, True, (64, 64), gen=6,
+                            hbm_blocks_per_request=1,
+                            drop_evicted_device_blocks=True)
+    assert all(len(t) == 6 for t in toks)
+    planes = list(eng.planes.values())
+    assert sum(p.blocks_dropped for p in planes) > 0
+    assert sum(p.blocks_restored for p in planes) > 0
 
 
 def test_batched_decode_on_hybrid_arch(smoke_setup):

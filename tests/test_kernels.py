@@ -62,6 +62,43 @@ def test_scatter_then_gather_roundtrip():
 
 
 # ---------------------------------------------------------------------------
+# head-major (H, NB, bs, D) variants — persistent device plane row slots
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("h,nb,bs,d,k", [(1, 8, 16, 32, 3), (2, 24, 8, 64, 6),
+                                         (4, 17, 16, 32, 5)])
+def test_gather_blocks_hkv(h, nb, bs, d, k):
+    pool = jax.random.normal(key(20), (h, nb, bs, d), jnp.float32)
+    idx = jax.random.randint(key(21), (k,), 0, nb)
+    out = ops.gather_blocks_hkv(pool, idx)
+    want = ref.gather_blocks_hkv(pool, idx)
+    assert out.shape == (h, k, bs, d)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(want))
+
+
+@pytest.mark.parametrize("h,nb,bs,d,k", [(1, 8, 16, 32, 3), (2, 24, 8, 64, 6)])
+def test_scatter_blocks_hkv(h, nb, bs, d, k):
+    pool = jax.random.normal(key(22), (h, nb, bs, d), jnp.float32)
+    new = jax.random.normal(key(23), (h, k, bs, d), jnp.float32)
+    dest = jax.random.choice(key(24), nb, (k,), replace=False)
+    out = ops.scatter_blocks_hkv(pool, new, dest)
+    want = ref.scatter_blocks_hkv(pool, new, dest)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(want))
+
+
+def test_scatter_gather_hkv_roundtrip_preserves_other_blocks():
+    pool = jax.random.normal(key(25), (2, 16, 8, 32), jnp.float32)
+    new = jax.random.normal(key(26), (2, 3, 8, 32), jnp.float32)
+    dest = jnp.array([1, 7, 15], jnp.int32)
+    pool2 = ops.scatter_blocks_hkv(pool, new, dest)
+    np.testing.assert_array_equal(
+        np.asarray(ops.gather_blocks_hkv(pool2, dest)), np.asarray(new))
+    untouched = [b for b in range(16) if b not in (1, 7, 15)]
+    np.testing.assert_array_equal(np.asarray(pool2[:, untouched]),
+                                  np.asarray(pool[:, untouched]))
+
+
+# ---------------------------------------------------------------------------
 # block_score (Quest cuboid upper bound)
 # ---------------------------------------------------------------------------
 

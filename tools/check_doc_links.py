@@ -1,0 +1,58 @@
+#!/usr/bin/env python3
+"""Check that relative links in the repo's markdown docs resolve.
+
+    python tools/check_doc_links.py [files...]
+
+With no arguments, checks README.md, docs/*.md, and benchmarks/README.md.
+External (scheme://) and intra-page (#anchor) links are skipped; relative
+links (including their optional #fragment-less path part) must exist on
+disk.  Exit code 1 if any link is broken — CI runs this in the docs job.
+"""
+from __future__ import annotations
+
+import os
+import re
+import sys
+from glob import glob
+
+LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def check(path: str) -> list:
+    broken = []
+    text = open(path, encoding="utf-8").read()
+    base = os.path.dirname(os.path.abspath(path))
+    for m in LINK_RE.finditer(text):
+        target = m.group(1)
+        if "://" in target or target.startswith(("#", "mailto:")):
+            continue
+        rel = target.split("#", 1)[0]
+        if not rel:
+            continue
+        if not os.path.exists(os.path.join(base, rel)):
+            line = text[:m.start()].count("\n") + 1
+            broken.append((path, line, target))
+    return broken
+
+
+def main() -> int:
+    files = sys.argv[1:] or (
+        [os.path.join(ROOT, "README.md")]
+        + sorted(glob(os.path.join(ROOT, "docs", "*.md")))
+        + [os.path.join(ROOT, "benchmarks", "README.md")])
+    broken = []
+    for f in files:
+        if os.path.exists(f):
+            broken += check(f)
+        else:
+            broken.append((f, 0, "<file missing>"))
+    for path, line, target in broken:
+        print(f"BROKEN {os.path.relpath(path, ROOT)}:{line}: {target}")
+    checked = len(files)
+    print(f"checked {checked} file(s); {len(broken)} broken link(s)")
+    return 1 if broken else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
