@@ -68,11 +68,12 @@ def engine_section() -> None:
     from repro.serving.engine import EngineConfig, ServingEngine
     from repro.serving.request import Request
 
-    header("engine_decode_plane: persistent vs stacked vs sequential "
-           "(smoke qwen2-0.5b, saturated decode batch)")
+    header("engine_decode_plane: staged vs persistent vs stacked vs "
+           "sequential (smoke qwen2-0.5b, saturated decode batch)")
     cfg = get_smoke_config("qwen2-0.5b")
     params = M.init_params(cfg, jax.random.PRNGKey(0), jnp.float32)
-    modes = (("persistent", dict(batched_decode=True,
+    modes = (("staged", dict(batched_decode=True, decode_plane="staged")),
+             ("persistent", dict(batched_decode=True,
                                  decode_plane="persistent")),
              ("stacked", dict(batched_decode=True, decode_plane="stacked")),
              ("sequential", dict(batched_decode=False)))
@@ -83,8 +84,11 @@ def engine_section() -> None:
             for _ in range(bs):
                 eng.submit(Request(prompt_len=64, max_new_tokens=8),
                            tokens=np.arange(5, 69, dtype=np.int32))
-            from repro.core.device_pool import decode_fn_for
-            fn = decode_fn_for(cfg, eng.eng.attn_impl)
+            from repro.core.device_pool import (decode_fn_for,
+                                                staged_fns_for)
+            fn = (staged_fns_for(cfg, eng.eng.attn_impl)
+                  if mode == "staged"
+                  else decode_fn_for(cfg, eng.eng.attn_impl))
             traces0, calls0 = fn.trace_count, fn.calls
             t0 = time.perf_counter()
             eng.run()
@@ -97,13 +101,18 @@ def engine_section() -> None:
                 stack_unstack_per_decode=round(
                     eng.stack_calls / max(eng.decode_step_calls, 1), 3),
                 wall_s=round(wall, 2))
-            if mode == "persistent" and eng.planes:
+            if mode in ("staged", "persistent") and eng.planes:
                 [plane] = eng.planes.values()
-                steps = fn.calls - calls0
+                # staged pays O(num_layers) LAUNCHES per iteration; both
+                # planes keep TRACES bounded by the shape-bucket grid
+                launches = fn.calls - calls0
                 row.update(
                     jit_traces=fn.trace_count - traces0,
                     jit_cache_hit=round(
-                        1.0 - (fn.trace_count - traces0) / max(steps, 1), 3),
+                        1.0 - (fn.trace_count - traces0)
+                        / max(launches, 1), 3),
+                    launches_per_iter=round(
+                        launches / max(eng.decode_step_calls, 1), 2),
                     device_pool_mib=round(plane.device_bytes() / 2**20, 2),
                     rows_reused=plane.rows_reused)
             emit("engine_decode", **row)

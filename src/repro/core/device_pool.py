@@ -23,6 +23,14 @@ batch:
   selected with a ``step_mask`` argument — occupancy changes do NOT change
   shapes, hence do not retrace.  Pool buffers are donated to the jitted
   call on accelerator backends so XLA updates them in place.
+* **Staged per-layer pipeline** — ``step_staged`` runs the same forward as
+  per-layer select -> [host restore] -> attend stage jits
+  (``_StagedDecodeFns``), giving the serving engine a window between a
+  layer's DSA selection and its attention in which fused FlashH2D restores
+  land in the device pool BEFORE use — the structure that makes
+  block-granular HBM eviction oracle-exact (the engine's default
+  ``decode_plane="staged"``).  Launches are O(num_layers) per iteration;
+  traces stay bounded by (stage kinds x shape buckets).
 * **FlashH2D/D2H wiring** — ``restore_blocks`` scatters fused-gather
   payloads from ``KVCacheManager.load_blocks_fused`` directly into device
   slots (the jnp scatter here is the interpret-mode stand-in for
@@ -138,6 +146,82 @@ def decode_fn_for(cfg, attn_impl: str) -> _DecodeFn:
     return _DECODE_FNS[key]
 
 
+class _StagedDecodeFns:
+    """Per-stage jits for the STAGED decode pipeline: embed, per-layer
+    select / attend (attention layers), per-layer recurrent (mamba/rwkv),
+    and the final logits stage.
+
+    Every stage function takes a LAYER's params pytree, so one trace serves
+    all structurally identical layers — per-iteration jitted LAUNCHES are
+    O(num_layers) but TRACES stay bounded by (distinct layer structures x
+    shape buckets), the same cache-hit invariant as the fused ``_DecodeFn``:
+    ``trace_count == len(shape_signatures)``.
+    """
+
+    def __init__(self, cfg, attn_impl: str):
+        self.cfg = cfg
+        self.attn_impl = attn_impl
+        self.trace_count = 0
+        self.calls = 0                      # jitted stage launches, total
+        self.shape_signatures: set = set()
+        # like _DecodeFn: donate the mutated pool buffers so XLA updates
+        # them in place on accelerator backends (CPU buffers not donatable)
+        on_accel = jax.default_backend() != "cpu"
+
+        def wrap(stage, f, donate=()):
+            def fn(*args):
+                self.trace_count += 1       # trace-time side effect only
+                return f(*args)
+            jitted = jax.jit(fn, donate_argnums=donate if on_accel else ())
+
+            def call(*args):
+                self.calls += 1
+                self.shape_signatures.add(
+                    (stage,) + tuple((tuple(leaf.shape), str(leaf.dtype))
+                                     for leaf in jax.tree.leaves(args)))
+                return jitted(*args)
+            return call
+
+        self.embed = wrap("embed",
+                          lambda params, tokens:
+                          M.decode_embed(params, cfg, tokens))
+        # select consumes and returns the layer's pool cache (arg 2): donate
+        # so the append/meta update reuses the buffer instead of copying the
+        # full pool per layer per iteration
+        self.select = wrap("select",
+                           lambda p, x, cache, cur_len, mask:
+                           M.decode_select_layer(p, cfg, x, cache, cur_len,
+                                                 step_mask=mask),
+                           donate=(2,))
+        self.attend = wrap("attend",
+                           lambda p, x, q, cache, cur_len, idx, valid, enc:
+                           M.decode_attend_layer(p, cfg, x, q, cache,
+                                                 cur_len, idx, valid,
+                                                 enc_kv=enc,
+                                                 attn_impl=attn_impl))
+        self._recurrent = {
+            kind: wrap("recurrent-" + kind,
+                       lambda p, x, cache, mask, kind=kind:
+                       M.decode_recurrent_layer(p, cfg, kind, x, cache,
+                                                step_mask=mask),
+                       donate=(2,))
+            for kind in ("mamba", "rwkv")}
+        self.logits = wrap("logits",
+                           lambda params, x, cur_len, mask:
+                           M.decode_logits(params, cfg, x, cur_len,
+                                           step_mask=mask))
+
+
+_STAGED_FNS: Dict[Tuple[str, str], _StagedDecodeFns] = {}
+
+
+def staged_fns_for(cfg, attn_impl: str) -> _StagedDecodeFns:
+    key = (repr(cfg), attn_impl)
+    if key not in _STAGED_FNS:
+        _STAGED_FNS[key] = _StagedDecodeFns(cfg, attn_impl)
+    return _STAGED_FNS[key]
+
+
 def gather_row_blocks(pool: jax.Array, row: int, blocks) -> jax.Array:
     """Gather `blocks` of one batch row: (B,H,NB,bs,D) -> (H,K,bs,D).
 
@@ -185,6 +269,7 @@ class DevicePoolPlane:
         self.policy = policy or BucketingPolicy()
         self.attn_impl = attn_impl
         self.decode_fn = decode_fn_for(cfg, attn_impl)
+        self.staged_fns = staged_fns_for(cfg, attn_impl)
         self.state: Optional[Dict] = None
         self.b_cap = 0
         self.nb_cap = 0
@@ -199,6 +284,24 @@ class DevicePoolPlane:
         self.rows_reused = 0
         self.blocks_dropped = 0
         self.blocks_restored = 0
+        self.blocks_restored_before_use = 0   # landed before the attention
+                                              # that selected them (staged)
+        # per-layer param slices for the staged pipeline, cached per params
+        # OBJECT (the entry's strong ref keeps the id() stable).  Lives on
+        # the plane — not the process-global _StagedDecodeFns — so retired
+        # engines' params are reclaimable once their planes go away.
+        self._layer_params_cache: Optional[Tuple[Dict, List[Dict]]] = None
+
+    def _layer_params(self, params: Dict) -> List[Dict]:
+        """Per-layer param slices (``get_layer``), computed once per params
+        object: with stacked layer params each slice is a device op, so
+        doing it per layer per iteration would bloat the launch count."""
+        hit = self._layer_params_cache
+        if hit is not None and hit[0] is params:
+            return hit[1]
+        layers = [M.get_layer(params, i) for i in range(self.cfg.num_layers)]
+        self._layer_params_cache = (params, layers)
+        return layers
 
     # -- capacity ----------------------------------------------------------
 
@@ -332,6 +435,80 @@ class DevicePoolPlane:
             self.cur_host[rid] += 1
         return logits, info, prev
 
+    def step_staged(self, params: Dict, token_by_req: Dict[str, int],
+                    stage_cb=None) -> Tuple[jax.Array, Dict, Dict[str, int]]:
+        """Staged per-layer pipeline: select -> [host restore] -> attend.
+
+        Runs the decode forward ONE layer at a time through the per-stage
+        jits (``_StagedDecodeFns``).  For each attention layer *l*:
+
+        1. ``select`` (jitted) appends the new token's KV to layer *l*'s
+           pool and emits its DSA block selections;
+        2. ``stage_cb(l, sel_np, prev_lens)`` runs on the host — this is
+           the window in which the engine writes back layer *l*'s new KV
+           (FlashD2H), touches the LRU, and scatters fused FlashH2D restore
+           payloads into ``self.state["caches"][l]``;
+        3. ``attend`` (jitted) runs block-sparse attention over the now
+           restored pool — restores always land BEFORE use, which is what
+           makes block-granular device eviction oracle-exact.
+
+        Pipelining: attend_l and select_{l+1} are dispatched back-to-back
+        without a host sync (JAX async dispatch) — the host's only per-layer
+        block is on the tiny selection tensor it needs for staging, so on an
+        accelerator the device queue holds attend_l + select_{l+1} while the
+        host does layer l+1's LRU bookkeeping and DRAM gather.  The cost
+        model charges this overlap as max(compute, transfer) per layer
+        (``costmodel.overlapped_decode_time``).
+
+        Returns (logits, info, prev) exactly like ``step``.
+        """
+        cfg = self.cfg
+        fns = self.staged_fns
+        tokens = np.zeros((self.b_cap,), np.int32)
+        mask = np.zeros((self.b_cap,), bool)
+        for rid, tok in token_by_req.items():
+            tokens[self.rows[rid]] = tok
+            mask[self.rows[rid]] = True
+        tokens = jnp.asarray(tokens)
+        mask = jnp.asarray(mask)
+        st = self.state
+        layer_params = self._layer_params(params)
+        enc_kvs = st["extra"].get("enc_kvs")
+        prev = {rid: self.cur_host[rid] for rid in token_by_req}
+        info: Dict[str, Any] = {"selected": {}}
+
+        x = fns.embed(params, tokens)
+        for i in range(cfg.num_layers):
+            kind = M.layer_kind(cfg, i)
+            if kind != "attn":
+                x, new_cache = fns._recurrent[kind](
+                    layer_params[i], x, st["caches"][i], mask)
+                st["caches"][i] = new_cache
+                continue
+            q, new_cache, idx, valid = fns.select(
+                layer_params[i], x, st["caches"][i], st["cur_len"], mask)
+            st["caches"][i] = new_cache
+            if idx is not None:
+                info["selected"][i] = idx
+            if stage_cb is not None:
+                # np.asarray(idx) is the ONLY host sync per layer: it
+                # forces select_i (and the still-queued attend_{i-1});
+                # the callback then scatters restores into caches[i].
+                # sel is None when DSA is off — the callback still runs
+                # (per-layer FlashD2H write-back), it just has no
+                # selections to stage.
+                stage_cb(i, None if idx is None else np.asarray(idx), prev)
+            x = fns.attend(layer_params[i], x, q, st["caches"][i],
+                           st["cur_len"], idx, valid,
+                           M.index_enc_kvs(enc_kvs, i))
+        logits, new_len = fns.logits(params, x, st["cur_len"], mask)
+        st["cur_len"] = new_len
+        self.buckets_seen.add((self.b_cap, self.nb_cap))
+        self.steps += 1
+        for rid in token_by_req:
+            self.cur_host[rid] += 1
+        return logits, info, prev
+
     # -- data plane: FlashH2D/D2H wiring ----------------------------------
 
     def pool_layers(self) -> List[int]:
@@ -341,18 +518,21 @@ class DevicePoolPlane:
         return [l for l, c in enumerate(self.state["caches"])
                 if M.is_pool_cache(c)]
 
-    def new_token_kv(self, req_ids: List[str], prev_lens: Dict[str, int]
+    def new_token_kv(self, req_ids: List[str], prev_lens: Dict[str, int],
+                     layers: Optional[List[int]] = None
                      ) -> Dict[int, Tuple[np.ndarray, Optional[np.ndarray]]]:
         """Read back the KV stripe this iteration appended (FlashD2H phase 1
         source): {model_layer: (k (R,Hkv,D), v (R,Hkv,D) | None)} with rows
-        ordered like `req_ids`."""
+        ordered like `req_ids`.  ``layers`` restricts the readback to a
+        subset of pool layers — the staged plane saves layer *l* right after
+        its select stage (and before its restores), one layer at a time."""
         bs = self.cfg.dsa.block_size
         rows = jnp.asarray([self.rows[r] for r in req_ids], jnp.int32)
         pos = np.asarray([prev_lens[r] for r in req_ids], np.int64)
         blk = jnp.asarray(pos // bs, jnp.int32)
         slot = jnp.asarray(pos % bs, jnp.int32)
         out: Dict[int, Tuple[np.ndarray, Optional[np.ndarray]]] = {}
-        for l in self.pool_layers():
+        for l in (self.pool_layers() if layers is None else layers):
             c = self.state["caches"][l]
             k = np.asarray(c["k"][rows, :, blk, slot])        # (R, Hkv, D)
             v = np.asarray(c["v"][rows, :, blk, slot]) if "v" in c else None
@@ -370,12 +550,16 @@ class DevicePoolPlane:
     def restore_blocks_fused(self, layer: int,
                              payload_by_req: Dict[str, Tuple[List[int],
                                                              np.ndarray,
-                                                             Any]]) -> None:
+                                                             Any]],
+                             before_use: bool = False) -> None:
         """Land one layer's fused FlashH2D payloads for the WHOLE batch in
         a single pool update (mirrors the one-launch-per-layer transfer:
         one device-buffer update per layer per iteration, not one per
         request).  payload_by_req: {req_id: (blocks, k (Hkv,K,bs,D),
-        v | None)}."""
+        v | None)}.  before_use: the restore lands between this layer's
+        select and attend stages (staged plane) — i.e. BEFORE the attention
+        that selected the blocks — and is counted separately so the
+        restore-ordering rate is observable (bench_overlap)."""
         c = self.state["caches"][layer]
         H = c["k"].shape[1]
         rows_l: List[int] = []
@@ -404,6 +588,8 @@ class DevicePoolPlane:
                     c["v"] = scatter_row_blocks(c["v"], row, blocks,
                                                 jnp.asarray(v_host[:H]))
             self.blocks_restored += len(blks_l)
+            if before_use:
+                self.blocks_restored_before_use += len(blks_l)
             return
         rows = jnp.asarray(rows_l, jnp.int32)
         blks = jnp.asarray(blks_l, jnp.int32)
@@ -416,6 +602,8 @@ class DevicePoolPlane:
                 np.concatenate(vs, axis=1).transpose(1, 0, 2, 3))
             c["v"] = c["v"].at[rows, :, blks].set(v_all.astype(c["v"].dtype))
         self.blocks_restored += len(blks_l)
+        if before_use:
+            self.blocks_restored_before_use += len(blks_l)
 
     def drop_blocks(self, req_id: str, layer: int,
                     blocks: List[int]) -> None:

@@ -29,6 +29,7 @@ from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.models.common import DSAConfig
 
@@ -119,6 +120,15 @@ def score_blocks(q: jax.Array, meta: jax.Array, method: str = "cuboid",
 # ---------------------------------------------------------------------------
 # Top-k block selection
 # ---------------------------------------------------------------------------
+
+def selected_block_ids(sel_row) -> list:
+    """Host-side de-dup of one request's selection: (Hkv, K) indices ->
+    sorted unique block ids.  This is the unit the serving engine feeds to
+    the per-layer LRU (``KVCacheManager.access_layer``) — invalid selections
+    were already substituted with block 0 by ``select_blocks``, which is a
+    force-included sink block, so no filtering is needed here."""
+    return sorted({int(b) for b in np.asarray(sel_row).ravel()})
+
 
 def select_blocks(scores: jax.Array, cfg: DSAConfig, cur_len: jax.Array,
                   ) -> Tuple[jax.Array, jax.Array]:

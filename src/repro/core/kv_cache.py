@@ -289,6 +289,40 @@ class KVCacheManager:
         if p is not None:
             self._retired_stats.merge(p.stats)
 
+    # -- control plane -----------------------------------------------------
+    def access_layer(self, layer: int, blocks_by_req: Dict[str, List[int]],
+                     drain_evicted: bool = False
+                     ) -> Tuple[Dict[str, List[int]],
+                                Dict[str, List[Tuple[int, int]]]]:
+        """Touch one layer's selected blocks for every request of a decode
+        iteration (LRU residency only — no transfer accounting; see
+        ``HBMCache.access``).
+
+        The per-layer unit matches the decode planes: the fused plane calls
+        this once per layer after its single forward, the staged plane calls
+        it between a layer's select and attend stages so the returned
+        ``missing`` can be loaded (``load_blocks_fused``) and restored into
+        device slots BEFORE that layer's attention.
+
+        `layer` is the attention-layer ordinal.  Returns
+        (missing_by_req, evicted_by_req): the block ids each request must
+        load, and — when ``drain_evicted`` — the (layer, block) keys each
+        request's LRU evicted during these accesses (``pop_evicted``; empty
+        lists otherwise).  Requests without a registered cache are skipped.
+        """
+        missing_by_req: Dict[str, List[int]] = {}
+        evicted_by_req: Dict[str, List[Tuple[int, int]]] = {}
+        for req_id, blocks in blocks_by_req.items():
+            cache = self.caches.get(req_id)
+            if cache is None:
+                continue
+            missing = cache.access(layer, blocks)
+            if missing:
+                missing_by_req[req_id] = missing
+            if drain_evicted:
+                evicted_by_req[req_id] = cache.pop_evicted()
+        return missing_by_req, evicted_by_req
+
     # -- data plane --------------------------------------------------------
     def load_blocks_fused(self, layer: int,
                           blocks_by_req: Dict[str, List[int]]

@@ -45,10 +45,19 @@ class Scheduler:
     """FCFS hybrid-batching scheduler with Algorithm 1 admission."""
 
     def __init__(self, cfg: SchedulerConfig, geom: KVGeometry,
-                 num_layers: int, top_k_blocks: int):
+                 num_layers: int, top_k_blocks: int,
+                 num_attn_layers: Optional[int] = None):
+        """num_layers: MODEL layers (token-layer prefill budget).
+        num_attn_layers: layers that hold paged KV — the multiplier the
+        working-set estimators use.  Defaults to ``geom.num_layers`` (the
+        geometry is attention-only in the engine and simulator); for hybrid
+        models it must NOT be ``num_layers``, or Algorithm 1's cold-start
+        worst case counts recurrent layers that cache nothing."""
         self.cfg = cfg
         self.geom = geom
         self.num_layers = num_layers
+        self.num_attn_layers = (geom.num_layers if num_attn_layers is None
+                                else num_attn_layers)
         self.top_k_blocks = top_k_blocks
         self.waiting: List[Request] = []
         self.running: List[Request] = []
@@ -77,10 +86,11 @@ class Scheduler:
             ws = self.working_sets.setdefault(
                 req.req_id, DecodeWorkingSet(self.geom, window=12))
             return estimate_decode_ws_bytes(ws, self.geom, self.top_k_blocks,
-                                            self.num_layers)
+                                            self.num_attn_layers)
         # prefill (or waiting about to prefill)
         return estimate_prefill_ws_bytes(self.geom, req.prompt_len,
-                                         self.cfg.prefill_mode)
+                                         self.cfg.prefill_mode,
+                                         self.num_attn_layers)
 
     def _initial_batch(self) -> Tuple[List[Request], List[Tuple[Request, int]]]:
         """S.getBatch(R_max, T_max): FCFS decode-first hybrid batching."""

@@ -8,7 +8,7 @@ chunked prefill, ONE layer of KV for layer-segmented prefill.
 from __future__ import annotations
 
 import collections
-from typing import Deque, FrozenSet, Iterable, Set, Tuple
+from typing import Deque, FrozenSet, Iterable, Optional, Set, Tuple
 
 from repro.core.kv_cache import KVGeometry
 
@@ -50,7 +50,12 @@ class DecodeWorkingSet:
 def estimate_decode_ws_bytes(ws: DecodeWorkingSet, geom: KVGeometry,
                              top_k_blocks: int, num_layers: int) -> int:
     """Working set estimate for the NEXT step: history union if available,
-    else the worst case (top-k fresh blocks for every layer)."""
+    else the worst case (top-k fresh blocks for every layer).
+
+    ``num_layers`` must be the ATTENTION-layer count: recurrent (mamba/rwkv)
+    layers hold no paged KV, so counting them would make Algorithm 1
+    over-throttle hybrid (jamba-style) batches in the cold-start worst case.
+    """
     per_lb = geom.block_bytes_per_head * geom.num_kv_heads
     if ws.size_blocks() == 0:
         return top_k_blocks * num_layers * per_lb
@@ -58,16 +63,25 @@ def estimate_decode_ws_bytes(ws: DecodeWorkingSet, geom: KVGeometry,
 
 
 def estimate_prefill_ws_bytes(geom: KVGeometry, prompt_tokens: int,
-                              mode: str) -> int:
+                              mode: str,
+                              num_attn_layers: Optional[int] = None) -> int:
     """Exact prefill working set (§3.3 "Prefill working set").
 
-    chunked: KV of ALL layers of the whole prompt must stay in HBM.
-    layer_segmented: bounded to ONE layer (previous layers evicted to DRAM).
+    chunked: KV of ALL attention layers of the whole prompt must stay in
+    HBM.  layer_segmented: bounded to ONE layer (previous layers evicted to
+    DRAM).
+
+    The layer multiplier is the ATTENTION-layer count — recurrent layers
+    produce no paged KV.  ``geom.num_layers`` already carries that count
+    when the geometry was built from ``cfg.num_attention_layers()`` (the
+    engine and simulator both do); ``num_attn_layers`` overrides it for
+    callers whose geometry tracks all model layers.
     """
     per_token_layer = (geom.head_dim * geom.dtype_bytes * geom.kv_factor
                        * geom.num_kv_heads)
+    L = geom.num_layers if num_attn_layers is None else num_attn_layers
     if mode == "chunked":
-        return prompt_tokens * per_token_layer * geom.num_layers
+        return prompt_tokens * per_token_layer * L
     elif mode == "layer_segmented":
         return prompt_tokens * per_token_layer
     raise ValueError(f"unknown prefill mode {mode!r}")

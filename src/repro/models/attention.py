@@ -498,25 +498,27 @@ def cp_decode_attention(cfg: ModelConfig, q, k, v, cache, cur_len, *,
 
 # ---------------------------------------------------------------------------
 # GQA decode step (DSA select-then-compute)
+#
+# The decode forward is split into two stage functions so the serving
+# engine's STAGED decode plane can interleave host work between them:
+#
+#   gqa_select_step : project q/k/v, append the new KV to the paged pool,
+#                     update DSA metadata, score + top-k select.
+#   gqa_attend_step : block-sparse attention over the (possibly restored)
+#                     pool + output projection.  Cache is READ-ONLY here —
+#                     the host may have scattered H2D restore payloads into
+#                     it between the two stages.
+#
+# ``gqa_decode_step`` composes the two in one trace (the fused plane); the
+# staged plane jits each stage separately, so a fused FlashH2D restore of
+# HBM-evicted blocks can land between select and attend — before use.
 # ---------------------------------------------------------------------------
 
-def gqa_decode_step(p: Dict[str, jax.Array], cfg: ModelConfig, x: jax.Array,
-                    cache: Dict[str, jax.Array], cur_len: jax.Array,
-                    *, attn_impl: str = "ref",
-                    cp_axis: Optional[str] = None,
-                    step_mask: Optional[jax.Array] = None
-                    ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
-    """One decode token.  x: (B, d); cur_len: (B,) tokens already cached.
-
-    Select-then-compute (paper Fig. 2): write new KV -> update metadata ->
-    score blocks -> top-k -> block-sparse attention.
-    cp_axis: context-parallel mesh axis name (pool blocks sharded) or None.
-    step_mask: optional (B,) bool — rows where False keep their pool/meta
-    byte-for-byte unchanged (the persistent device plane steps a padded
-    batch whose inactive rows must not mutate; attention still computes
-    garbage for those rows, which the caller discards).
-    """
-    B, d = x.shape
+def _gqa_project_decode(p: Dict[str, jax.Array], cfg: ModelConfig,
+                        x: jax.Array, cur_len: jax.Array):
+    """Decode-token q/k/v projections with RoPE at position cur_len.
+    x: (B, d) -> q (B,Hq,hd), k/v (B,Hkv,hd)."""
+    B, _ = x.shape
     Hq, Hkv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
     q = x @ p["wq"]
     k = x @ p["wk"]
@@ -528,16 +530,19 @@ def gqa_decode_step(p: Dict[str, jax.Array], cfg: ModelConfig, x: jax.Array,
     v = v.reshape(B, 1, Hkv, hd)
     q = apply_rope(q, cur_len[:, None], cfg.rope_theta)[:, 0]   # (B,Hq,hd)
     k = apply_rope(k, cur_len[:, None], cfg.rope_theta)[:, 0]
-    v = v[:, 0]
+    return q, k, v[:, 0]
 
-    if CP_AXES is not None and cfg.dsa.enabled:
-        o, new_cache, sel = cp_decode_attention(
-            cfg, q, k, v, cache, cur_len,
-            dp_axes=CP_AXES[0], model_axis=CP_AXES[1], mesh=CP_MESH)
-        out = o.reshape(B, Hq * hd) @ p["wo"]
-        return out, new_cache, sel
 
+def gqa_select_step(p: Dict[str, jax.Array], cfg: ModelConfig, x: jax.Array,
+                    cache: Dict[str, jax.Array], cur_len: jax.Array,
+                    *, step_mask: Optional[jax.Array] = None):
+    """Select stage: append new KV, update metadata, score + top-k.
+
+    Returns (q, new_cache, idx, valid); idx/valid are None when DSA is
+    disabled (the attend stage then runs dense attention over the pool).
+    step_mask: rows where False keep pool/meta byte-for-byte unchanged."""
     bs = cfg.dsa.block_size
+    q, k, v = _gqa_project_decode(p, cfg, x, cur_len)
     if step_mask is None:
         k_pool = _append_to_pool(cache["k"], k, cur_len, bs)
         v_pool = _append_to_pool(cache["v"], v, cur_len, bs)
@@ -548,25 +553,67 @@ def gqa_decode_step(p: Dict[str, jax.Array], cfg: ModelConfig, x: jax.Array,
         v_pool = _append_masked(cache["v"], v, blk, slot, step_mask)
         meta = _update_meta_masked(cache["meta"], k, blk, slot, step_mask,
                                    cfg.dsa)
-    new_len = cur_len + 1
-
-    sel = None
+    idx = valid = None
     if cfg.dsa.enabled:
         scores = dsa.score_blocks(q, meta, cfg.dsa.metadata)
-        idx, valid = dsa.select_blocks(scores, cfg.dsa, new_len)
-        sel = idx
-        if attn_impl == "kernel":
-            from repro.kernels import ops as kops
-            o = kops.sparse_decode_attention(q, k_pool, v_pool, idx, valid,
-                                             new_len)
-        else:
-            o = dsa.sparse_decode_attention_ref(q, k_pool, v_pool, idx, valid,
-                                                new_len)
-    else:
-        o = dsa.full_decode_attention_ref(q, k_pool, v_pool, new_len)
+        idx, valid = dsa.select_blocks(scores, cfg.dsa, cur_len + 1)
+    return q, {"k": k_pool, "v": v_pool, "meta": meta}, idx, valid
 
-    out = o.reshape(B, Hq * hd) @ p["wo"]
-    return out, {"k": k_pool, "v": v_pool, "meta": meta}, sel
+
+def gqa_attend_step(p: Dict[str, jax.Array], cfg: ModelConfig, q: jax.Array,
+                    cache: Dict[str, jax.Array], cur_len: jax.Array,
+                    idx: Optional[jax.Array], valid: Optional[jax.Array],
+                    *, attn_impl: str = "ref") -> jax.Array:
+    """Compute stage: block-sparse attention over the selected blocks of the
+    (possibly restored) pool, then the output projection.  Pure read of
+    ``cache`` — never mutates it."""
+    B, Hq, hd = q.shape
+    new_len = cur_len + 1
+    if idx is None:
+        o = dsa.full_decode_attention_ref(q, cache["k"], cache["v"], new_len)
+    elif attn_impl == "kernel":
+        from repro.kernels import ops as kops
+        o = kops.sparse_decode_attention(q, cache["k"], cache["v"], idx,
+                                         valid, new_len)
+    else:
+        o = dsa.sparse_decode_attention_ref(q, cache["k"], cache["v"], idx,
+                                            valid, new_len)
+    return o.reshape(B, Hq * hd) @ p["wo"]
+
+
+def gqa_decode_step(p: Dict[str, jax.Array], cfg: ModelConfig, x: jax.Array,
+                    cache: Dict[str, jax.Array], cur_len: jax.Array,
+                    *, attn_impl: str = "ref",
+                    cp_axis: Optional[str] = None,
+                    step_mask: Optional[jax.Array] = None
+                    ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """One decode token, select and attend FUSED in one trace.
+    x: (B, d); cur_len: (B,) tokens already cached.
+
+    Select-then-compute (paper Fig. 2): write new KV -> update metadata ->
+    score blocks -> top-k -> block-sparse attention.
+    cp_axis: context-parallel mesh axis name (pool blocks sharded) or None.
+    step_mask: optional (B,) bool — rows where False keep their pool/meta
+    byte-for-byte unchanged (the persistent device plane steps a padded
+    batch whose inactive rows must not mutate; attention still computes
+    garbage for those rows, which the caller discards).
+    """
+    B, _ = x.shape
+    Hq, hd = cfg.num_heads, cfg.head_dim
+
+    if CP_AXES is not None and cfg.dsa.enabled:
+        q, k, v = _gqa_project_decode(p, cfg, x, cur_len)
+        o, new_cache, sel = cp_decode_attention(
+            cfg, q, k, v, cache, cur_len,
+            dp_axes=CP_AXES[0], model_axis=CP_AXES[1], mesh=CP_MESH)
+        out = o.reshape(B, Hq * hd) @ p["wo"]
+        return out, new_cache, sel
+
+    q, new_cache, idx, valid = gqa_select_step(p, cfg, x, cache, cur_len,
+                                               step_mask=step_mask)
+    out = gqa_attend_step(p, cfg, q, new_cache, cur_len, idx, valid,
+                          attn_impl=attn_impl)
+    return out, new_cache, idx
 
 
 def cross_decode_step(p: Dict[str, jax.Array], cfg: ModelConfig, x: jax.Array,
@@ -613,20 +660,15 @@ def mla_self_attention(p: Dict[str, jax.Array], cfg: ModelConfig, x: jax.Array,
     return out
 
 
-def mla_decode_step(p: Dict[str, jax.Array], cfg: ModelConfig, x: jax.Array,
-                    cache: Dict[str, jax.Array], cur_len: jax.Array,
-                    *, attn_impl: str = "ref",
-                    step_mask: Optional[jax.Array] = None):
-    """Absorbed-form MLA decode: the latent cache behaves as a single KV head
-    with key dim (kv_lora_rank + rope) and value = latent (kv_lora_rank).
-    DSA metadata lives in latent space — beyond-paper extension (DESIGN §4).
-    step_mask: see ``gqa_decode_step`` — False rows leave the cache unchanged.
-    """
+def _mla_project_decode(p: Dict[str, jax.Array], cfg: ModelConfig,
+                        x: jax.Array, cur_len: jax.Array):
+    """Absorbed-form decode projections: effective query in latent space and
+    the new token's latent KV.  x: (B, d) -> (q_eff (B,H,lat+dr),
+    latent (B, lat+dr))."""
     m = cfg.mla
-    B, d = x.shape
+    B, _ = x.shape
     H = cfg.num_heads
-    dn, dr, dv, lat = (m.qk_nope_head_dim, m.qk_rope_head_dim, m.v_head_dim,
-                       m.kv_lora_rank)
+    dn, dr, lat = m.qk_nope_head_dim, m.qk_rope_head_dim, m.kv_lora_rank
 
     cq = rms_norm(x @ p["w_dq"], p["q_norm"], cfg.norm_eps)
     qall = (cq @ p["w_uq"]).reshape(B, H, dn + dr)
@@ -644,8 +686,16 @@ def mla_decode_step(p: Dict[str, jax.Array], cfg: ModelConfig, x: jax.Array,
     k_rope = apply_rope((x @ p["w_kr"])[:, None, None, :], cur_len[:, None],
                         cfg.rope_theta)[:, 0, 0]
     latent = jnp.concatenate([c_kv_n, k_rope], axis=-1)     # (B, lat+dr)
+    return q_eff, latent
 
+
+def mla_select_step(p: Dict[str, jax.Array], cfg: ModelConfig, x: jax.Array,
+                    cache: Dict[str, jax.Array], cur_len: jax.Array,
+                    *, step_mask: Optional[jax.Array] = None):
+    """MLA select stage (mirror of ``gqa_select_step`` over the latent
+    pool).  Returns (q_eff, new_cache, idx, valid)."""
     bs = cfg.dsa.block_size
+    q_eff, latent = _mla_project_decode(p, cfg, x, cur_len)
     if step_mask is None:
         k_pool = _append_to_pool(cache["k"], latent[:, None, :], cur_len, bs)
         meta = _update_meta(cache["meta"], latent[:, None, :], cur_len,
@@ -656,11 +706,60 @@ def mla_decode_step(p: Dict[str, jax.Array], cfg: ModelConfig, x: jax.Array,
                                 step_mask)
         meta = _update_meta_masked(cache["meta"], latent[:, None, :], blk,
                                    slot, step_mask, cfg.dsa)
-    new_len = cur_len + 1
+    idx = valid = None
+    if cfg.dsa.enabled:
+        scores = dsa.score_blocks(q_eff, meta, cfg.dsa.metadata)
+        idx, valid = dsa.select_blocks(scores, cfg.dsa, cur_len + 1)
+    return q_eff, {"k": k_pool, "meta": meta}, idx, valid
 
+
+def mla_attend_step(p: Dict[str, jax.Array], cfg: ModelConfig,
+                    q_eff: jax.Array, cache: Dict[str, jax.Array],
+                    cur_len: jax.Array, idx: Optional[jax.Array],
+                    valid: Optional[jax.Array], *,
+                    attn_impl: str = "ref") -> jax.Array:
+    """MLA compute stage: latent block-sparse attention over the (possibly
+    restored) pool, value up-projection, output projection.  Read-only on
+    ``cache``."""
+    m = cfg.mla
+    B = q_eff.shape[0]
+    H = cfg.num_heads
+    dn, dr, dv, lat = (m.qk_nope_head_dim, m.qk_rope_head_dim, m.v_head_dim,
+                       m.kv_lora_rank)
     scale = 1.0 / ((dn + dr) ** 0.5)
-    sel = None
+    new_len = cur_len + 1
+    k_pool = cache["k"]
+    if idx is None:
+        o_lat = dsa.full_decode_attention_ref(q_eff, k_pool, k_pool, new_len,
+                                              scale=scale)
+    else:
+        o_lat = dsa.sparse_decode_attention_ref(q_eff, k_pool, k_pool, idx,
+                                                valid, new_len, scale=scale)
+    # o_lat: (B, H, lat+dr); value part is the first `lat` dims
+    o_lat = o_lat[..., :lat]
+    w_uv = p["w_uv"].reshape(lat, H, dv)
+    o = jnp.einsum("bhl,lhd->bhd", o_lat.astype(jnp.float32),
+                   w_uv.astype(jnp.float32)).astype(q_eff.dtype)
+    return o.reshape(B, H * dv) @ p["wo"]
+
+
+def mla_decode_step(p: Dict[str, jax.Array], cfg: ModelConfig, x: jax.Array,
+                    cache: Dict[str, jax.Array], cur_len: jax.Array,
+                    *, attn_impl: str = "ref",
+                    step_mask: Optional[jax.Array] = None):
+    """Absorbed-form MLA decode, select and attend FUSED in one trace (see
+    the GQA stage split above): the latent cache behaves as a single KV head
+    with key dim (kv_lora_rank + rope) and value = latent (kv_lora_rank).
+    DSA metadata lives in latent space — beyond-paper extension (DESIGN §4).
+    step_mask: see ``gqa_decode_step`` — False rows leave the cache unchanged.
+    """
+    m = cfg.mla
+    B, _ = x.shape
+    H = cfg.num_heads
+    dv, lat = m.v_head_dim, m.kv_lora_rank
+
     if CP_AXES is not None and cfg.dsa.enabled:
+        q_eff, latent = _mla_project_decode(p, cfg, x, cur_len)
         o_lat, new_cache, sel = cp_mla_decode_attention(
             cfg, q_eff, latent, cache, cur_len,
             dp_axes=CP_AXES[0], model_axis=CP_AXES[1], mesh=CP_MESH)
@@ -670,19 +769,9 @@ def mla_decode_step(p: Dict[str, jax.Array], cfg: ModelConfig, x: jax.Array,
                        w_uv.astype(jnp.float32)).astype(x.dtype)
         out = o.reshape(B, H * dv) @ p["wo"]
         return out, new_cache, sel
-    if cfg.dsa.enabled:
-        scores = dsa.score_blocks(q_eff, meta, cfg.dsa.metadata)
-        idx, valid = dsa.select_blocks(scores, cfg.dsa, new_len)
-        sel = idx
-        o_lat = dsa.sparse_decode_attention_ref(q_eff, k_pool, k_pool, idx,
-                                                valid, new_len, scale=scale)
-    else:
-        o_lat = dsa.full_decode_attention_ref(q_eff, k_pool, k_pool, new_len,
-                                              scale=scale)
-    # o_lat: (B, H, lat+dr); value part is the first `lat` dims
-    o_lat = o_lat[..., :lat]
-    w_uv = p["w_uv"].reshape(lat, H, dv)
-    o = jnp.einsum("bhl,lhd->bhd", o_lat.astype(jnp.float32),
-                   w_uv.astype(jnp.float32)).astype(x.dtype)
-    out = o.reshape(B, H * dv) @ p["wo"]
-    return out, {"k": k_pool, "meta": meta}, sel
+
+    q_eff, new_cache, idx, valid = mla_select_step(p, cfg, x, cache, cur_len,
+                                                   step_mask=step_mask)
+    out = mla_attend_step(p, cfg, q_eff, new_cache, cur_len, idx, valid,
+                          attn_impl=attn_impl)
+    return out, new_cache, idx

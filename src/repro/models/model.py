@@ -662,6 +662,26 @@ def _mask_state(new, old, step_mask: jax.Array):
     return jax.tree.map(sel, new, old)
 
 
+def _decode_epilogue(p: Dict, cfg: ModelConfig, x: jax.Array, enc_kv):
+    """Post-mixer part of a decode layer: cross-attention (whisper) + FFN.
+    Shared by the fused (``_decode_layer``) and staged
+    (``decode_attend_layer``) paths so their numerics agree."""
+    if enc_kv is not None and "cross" in p:
+        h = attn.cross_decode_step(p["cross"], cfg,
+                                   _norm(cfg, p["cross_norm"], x), *enc_kv)
+        x = x + h
+    h_in = _norm(cfg, p["ffn_norm"], x)
+    if "moe" in p:
+        # drop_free: expert capacity must not couple the requests of a
+        # batched decode step (keeps batched == per-request decode)
+        h, _ = ffn_mod.moe_apply(p["moe"], cfg, h_in[:, None, :],
+                                 drop_free=True)
+        h = h[:, 0]
+    else:
+        h = ffn_mod.ffn_apply(p["ffn"], h_in)
+    return x + h
+
+
 def _decode_layer(p: Dict, cfg: ModelConfig, kind: str, x: jax.Array,
                   cache, cur_len: jax.Array, enc_kv, attn_impl: str,
                   step_mask: Optional[jax.Array] = None):
@@ -696,20 +716,79 @@ def _decode_layer(p: Dict, cfg: ModelConfig, kind: str, x: jax.Array,
                                              cur_len, attn_impl=attn_impl,
                                              step_mask=step_mask)
     x = x + h
-    if enc_kv is not None and "cross" in p:
-        h = attn.cross_decode_step(p["cross"], cfg,
-                                   _norm(cfg, p["cross_norm"], x), *enc_kv)
-        x = x + h
-    h_in = _norm(cfg, p["ffn_norm"], x)
-    if "moe" in p:
-        # drop_free: expert capacity must not couple the requests of a
-        # batched decode step (keeps batched == per-request decode)
-        h, _ = ffn_mod.moe_apply(p["moe"], cfg, h_in[:, None, :],
-                                 drop_free=True)
-        h = h[:, 0]
+    return _decode_epilogue(p, cfg, x, enc_kv), cache, sel
+
+
+# ---------------------------------------------------------------------------
+# Staged per-layer decode (select -> [host restore] -> attend)
+#
+# The staged decode plane (``repro.core.device_pool.step_staged``) runs ONE
+# layer at a time so the serving engine can stage HBM-miss restores between
+# a layer's DSA selection and its attention: select emits the selections
+# (and appends the layer's new KV), the host lands the fused FlashH2D
+# payloads in the device pool, attend then reads the restored blocks — which
+# is what makes block-granular device eviction oracle-exact.  All functions
+# here take the LAYER's params (``get_layer``), not the full model, so one
+# jit trace serves every structurally identical layer.
+# ---------------------------------------------------------------------------
+
+def decode_embed(params: Dict, cfg: ModelConfig, tokens: jax.Array
+                 ) -> jax.Array:
+    """Stage 0: token embedding.  tokens (B,) -> x (B, d)."""
+    return params["embed"][tokens]
+
+
+def decode_select_layer(p: Dict, cfg: ModelConfig, x: jax.Array, cache,
+                        cur_len: jax.Array,
+                        step_mask: Optional[jax.Array] = None):
+    """Select stage of one ATTENTION layer: pre-norm, project, append the
+    new token's KV to the paged pool, update DSA metadata, score + top-k.
+    Returns (q, new_cache, idx, valid) — idx/valid None when DSA is off."""
+    h_in = _norm(cfg, p["attn_norm"], x)
+    if cfg.attention_type == "mla":
+        return attn.mla_select_step(p["attn"], cfg, h_in, cache, cur_len,
+                                    step_mask=step_mask)
+    return attn.gqa_select_step(p["attn"], cfg, h_in, cache, cur_len,
+                                step_mask=step_mask)
+
+
+def decode_attend_layer(p: Dict, cfg: ModelConfig, x: jax.Array,
+                        q: jax.Array, cache, cur_len: jax.Array,
+                        idx, valid, enc_kv=None,
+                        attn_impl: str = "ref") -> jax.Array:
+    """Compute stage of one ATTENTION layer: block-sparse attention over the
+    (possibly restored) pool + residual + cross-attn + FFN.  Reads ``cache``
+    but never writes it — the host may have scattered restore payloads into
+    it after the select stage."""
+    if cfg.attention_type == "mla":
+        h = attn.mla_attend_step(p["attn"], cfg, q, cache, cur_len, idx,
+                                 valid, attn_impl=attn_impl)
     else:
-        h = ffn_mod.ffn_apply(p["ffn"], h_in)
-    return x + h, cache, sel
+        h = attn.gqa_attend_step(p["attn"], cfg, q, cache, cur_len, idx,
+                                 valid, attn_impl=attn_impl)
+    return _decode_epilogue(p, cfg, x + h, enc_kv)
+
+
+def decode_recurrent_layer(p: Dict, cfg: ModelConfig, kind: str,
+                           x: jax.Array, cache,
+                           step_mask: Optional[jax.Array] = None):
+    """One mamba/rwkv layer as a single stage (no selection, no restore —
+    recurrent layers hold no paged KV).  Returns (x, new_cache)."""
+    dummy_len = jnp.zeros((x.shape[0],), jnp.int32)   # unused by recurrents
+    x, cache, _ = _decode_layer(p, cfg, kind, x, cache, dummy_len,
+                                None, "ref", step_mask=step_mask)
+    return x, cache
+
+
+def decode_logits(params: Dict, cfg: ModelConfig, x: jax.Array,
+                  cur_len: jax.Array,
+                  step_mask: Optional[jax.Array] = None):
+    """Final stage: lm head + cur_len advance (masked rows stay parked).
+    Returns (logits (B, V), new_cur_len (B,))."""
+    logits = lm_head(params, cfg, x[:, None, :])[:, 0]
+    new_len = (cur_len + 1 if step_mask is None
+               else cur_len + step_mask.astype(jnp.int32))
+    return logits, new_len
 
 
 def _decode_scan(params: Dict, cfg: ModelConfig, x: jax.Array, state: Dict,

@@ -133,6 +133,31 @@ def prefill_time(hw: HardwareSpec, mc: ModelCost, new_tokens: int,
     return flops / (hw.peak_flops * hw.mfu)
 
 
+def overlapped_decode_time(hw: HardwareSpec, mc: ModelCost, batch: int,
+                           attended_tokens_per_req: float,
+                           transfer_bytes_by_layer) -> float:
+    """Staged-pipeline decode charge (§3.2's H2D/compute overlap).
+
+    The fused plane charges decode compute + ALL restore transfer serially
+    (one forward, transfers can only land after it).  The staged plane
+    restores layer l's missing blocks while adjacent layers compute, so
+    each layer is charged max(layer compute, layer transfer) instead of the
+    sum — the paper's pipelining bound.
+
+    transfer_bytes_by_layer: H2D restore payload bytes per MODEL layer this
+    iteration (0 for layers with no misses or no paged KV); entries beyond
+    ``mc.num_layers`` are ignored, missing entries charge compute only.
+    """
+    t_layer = decode_time(hw, mc, batch, attended_tokens_per_req) \
+        / max(mc.num_layers, 1)
+    t = 0.0
+    per_layer = list(transfer_bytes_by_layer)[:mc.num_layers]
+    for b in per_layer:
+        t += max(t_layer, fused_transfer_time(hw, b) if b > 0 else 0.0)
+    t += t_layer * max(0, mc.num_layers - len(per_layer))
+    return t
+
+
 def decode_time(hw: HardwareSpec, mc: ModelCost, batch: int,
                 attended_tokens_per_req: float) -> float:
     """Memory-bound decode iteration: weights read once per iteration +

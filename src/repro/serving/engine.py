@@ -4,14 +4,21 @@ This is the system the paper builds: a vLLM-style continuous-batching engine
 with
 
   * dynamic sparse attention decode (select-then-compute, §2.2) executed as
-    ONE batched model forward per iteration over a PERSISTENT shared device
-    pool (``repro.core.device_pool.DevicePoolPlane``): requests are admitted
-    into padded pool rows once, stepped via a jit-compiled bucketed
-    `decode_step` (one compile per shape bucket, zero per-iteration
-    stack/unstack copies), and released when they finish so later requests
-    reuse their slots.  ``decode_plane="stacked"`` keeps the legacy
-    pad+concat-every-iteration path as the equivalence oracle;
-    ``batched_decode=False`` is the per-request loop,
+    a STAGED per-layer pipeline over a PERSISTENT shared device pool
+    (``repro.core.device_pool.DevicePoolPlane``): requests are admitted into
+    padded pool rows once, each attention layer steps through jit-compiled
+    bucketed select -> [host restore] -> attend stages (one compile per
+    stage per shape bucket, zero per-iteration stack/unstack copies, O(L)
+    launches per iteration), and rows are released when requests finish so
+    later admissions reuse their slots.  Because a layer's fused FlashH2D
+    restores land BETWEEN its DSA selection and its attention, HBM-evicted
+    blocks can be physically dropped from the device pool without changing
+    outputs (``drop_evicted_device_blocks`` defaults ON here — the paper's
+    §3.2 overlap story, end to end).  ``decode_plane="persistent"`` keeps
+    the fused one-launch forward over the same plane and
+    ``decode_plane="stacked"`` the legacy pad+concat-every-iteration path,
+    both as greedy-equivalence oracles; ``batched_decode=False`` is the
+    per-request loop,
   * a hierarchical HBM–DRAM KV manager with per-request LRU HBM caches and
     host pools (§3.1 / §3.2 — FlashH2D/D2H accounting on every transfer;
     decode misses load through ONE fused FlashH2D launch per layer per
@@ -72,26 +79,36 @@ class EngineConfig:
     seed: int = 0
     batched_decode: bool = True              # ONE decode_step per iteration
                                              # (False: legacy B=1 loop)
-    decode_plane: str = "persistent"         # "persistent": requests live in
-                                             # a DevicePoolPlane (jitted,
-                                             # bucketed, zero per-iteration
-                                             # stack/unstack); "stacked":
-                                             # legacy pad+concat every
-                                             # iteration (equivalence oracle)
+    decode_plane: str = "staged"             # "staged" (default): per-layer
+                                             # select -> restore -> attend
+                                             # pipeline over a
+                                             # DevicePoolPlane — H2D
+                                             # restores land BEFORE the
+                                             # attention that selected them;
+                                             # "persistent": the fused
+                                             # one-launch forward over the
+                                             # same plane; "stacked": legacy
+                                             # pad+concat every iteration.
+                                             # All three are greedy-token
+                                             # equivalent oracles of each
+                                             # other (without block drops).
     bucketing: BucketingPolicy = dataclasses.field(
-        default_factory=BucketingPolicy)     # persistent-plane shape buckets
+        default_factory=BucketingPolicy)     # device-plane shape buckets
     decode_write_back: bool = True           # FlashD2H: save newly generated
                                              # KV to the host pool each
                                              # iteration (one fused d2h call
                                              # per layer), keeping DRAM a
                                              # superset of device KV
-    drop_evicted_device_blocks: bool = False
-    # True: HBM-evicted blocks are physically zeroed on device and only
-    # restored (from the host pool, via the fused H2D gather) AFTER the
-    # forward that re-selected them — a real memory drop whose restore
-    # latency is modeled, but which changes outputs under eviction pressure
-    # because select and compute are fused in one launch.  Leave False for
-    # oracle-exact decode; see docs/architecture.md.
+    drop_evicted_device_blocks: Optional[bool] = None
+    # True: HBM-evicted blocks are physically zeroed on device and restored
+    # from the host pool via the fused H2D gather when re-selected.  On the
+    # STAGED plane the restore lands between a layer's select and attend
+    # stages — before use — so the physical drop is oracle-exact and the
+    # knob defaults ON (None -> resolved to decode_plane == "staged").  On
+    # the fused "persistent" plane a restore can only land AFTER the forward
+    # that re-selected the block, so the forward reads zeros under eviction
+    # pressure and outputs diverge — supported for demonstration, default
+    # off.  See docs/architecture.md §3.
 
 
 @dataclasses.dataclass
@@ -122,26 +139,38 @@ class ServingEngine:
         self.cfg = cfg
         self.eng = eng
         self.hw = hw
-        if eng.decode_plane not in ("persistent", "stacked"):
+        if eng.decode_plane not in ("staged", "persistent", "stacked"):
             raise ValueError(f"unknown decode_plane {eng.decode_plane!r}; "
-                             f"expected 'persistent' or 'stacked'")
+                             f"expected 'staged', 'persistent' or 'stacked'")
         if eng.prefill_mode == "chunked" and cfg.attention_type == "mla":
             # the chunked baseline carries dense (k, v) context between
             # chunks; MLA's latent cache has no chunked-context path yet
             raise NotImplementedError(
                 "chunked prefill does not support MLA models; use "
                 "prefill_mode='layer_segmented'")
+        if eng.drop_evicted_device_blocks is None:
+            # the staged plane restores evicted blocks BEFORE the attention
+            # that re-selects them, so the physical drop is oracle-exact
+            # there and on by default; everywhere else it would change
+            # outputs (or has no device plane to act on).  Resolve into a
+            # COPY — mutating the caller's config would leak the resolved
+            # value into configs reused for other planes.
+            eng = dataclasses.replace(eng, drop_evicted_device_blocks=(
+                eng.decode_plane == "staged" and eng.batched_decode
+                and eng.decode_write_back))
+            self.eng = eng
         if eng.drop_evicted_device_blocks and not eng.decode_write_back:
             raise ValueError(
                 "drop_evicted_device_blocks requires decode_write_back: "
                 "restores come from the host pool, which is only a superset "
                 "of device KV when decode write-back is on")
         if eng.drop_evicted_device_blocks and not (
-                eng.batched_decode and eng.decode_plane == "persistent"):
+                eng.batched_decode
+                and eng.decode_plane in ("staged", "persistent")):
             raise ValueError(
-                "drop_evicted_device_blocks only acts on the persistent "
-                "device plane (batched_decode=True, "
-                "decode_plane='persistent')")
+                "drop_evicted_device_blocks only acts on a device plane "
+                "(batched_decode=True, decode_plane='staged' or "
+                "'persistent')")
         self.mc = cm.ModelCost.from_config(cfg)
         self.rng = np.random.default_rng(eng.seed)
 
@@ -173,6 +202,14 @@ class ServingEngine:
                                                  # persistent plane)
         self.planes: Dict[Tuple, DevicePoolPlane] = {}   # group_key -> plane
         self._req_plane: Dict[str, DevicePoolPlane] = {}
+        self._staged_layer_bytes: Dict[int, int] = {}    # model layer ->
+                                                         # H2D restore bytes
+                                                         # this iteration
+                                                         # (staged charging)
+        self.staged_probe = None   # test hook: called between a layer's
+                                   # restore and attend as probe(engine,
+                                   # plane, layer, sts, blocks_by_req) —
+                                   # the restore-ordering window
         # model layer -> attn-layer ordinal (hot path: per layer per decode
         # iteration) and its inverse (maps HBMCache eviction keys back to
         # plane cache indices), both precomputed once
@@ -436,25 +473,22 @@ class ServingEngine:
         loads = 0
         sel_pairs: Dict[str, List[Tuple[int, int]]] = \
             {st.req.req_id: [] for st in sts}
-        evicted: Dict[str, List[Tuple[int, int]]] = \
-            {st.req.req_id: [] for st in sts}
+        evicted: Dict[str, set] = {st.req.req_id: set() for st in sts}
         for l in sorted(selected):
             sel = np.asarray(selected[l])
             lidx = self._attn_layer_index(l)
-            missing_by_req: Dict[str, List[int]] = {}
+            blocks_by_req: Dict[str, List[int]] = {}
             for b, st in enumerate(sts):
                 row = b if plane is None else plane.rows[st.req.req_id]
-                blocks = sorted(set(int(x) for x in sel[row].ravel()))
+                blocks = dsa_mod.selected_block_ids(sel[row])
+                blocks_by_req[st.req.req_id] = blocks
                 sel_pairs[st.req.req_id].extend((lidx, x) for x in blocks)
-                cache = self.kv_mgr.caches.get(st.req.req_id)
-                if cache is None:
-                    continue
-                missing = cache.access(lidx, blocks)
-                if self.eng.drop_evicted_device_blocks:
-                    evicted[st.req.req_id].extend(cache.pop_evicted())
-                if missing:
-                    missing_by_req[st.req.req_id] = missing
-                    loads += len(missing)
+            missing_by_req, evicted_by_req = self.kv_mgr.access_layer(
+                lidx, blocks_by_req,
+                drain_evicted=self.eng.drop_evicted_device_blocks)
+            for rid, ev in evicted_by_req.items():
+                evicted[rid].update(ev)
+            loads += sum(len(m) for m in missing_by_req.values())
             if missing_by_req:
                 payloads = self.kv_mgr.load_blocks_fused(lidx, missing_by_req)
                 if plane is not None and self.eng.decode_write_back:
@@ -467,24 +501,47 @@ class ServingEngine:
                         l, {rid: (missing_by_req[rid], k, v)
                             for rid, (k, v) in payloads.items()})
         if plane is not None and self.eng.drop_evicted_device_blocks:
-            for st in sts:
-                cache = self.kv_mgr.caches.get(st.req.req_id)
-                if cache is None:
-                    continue
-                by_layer: Dict[int, List[int]] = {}
-                for elidx, blk in evicted[st.req.req_id]:
-                    if not cache.resident(elidx, blk):   # not re-loaded since
-                        by_layer.setdefault(elidx, []).append(blk)
-                for elidx, blks in by_layer.items():
-                    layer = self._lidx_to_layer.get(elidx)
-                    if layer is not None:
-                        plane.drop_blocks(st.req.req_id, layer,
-                                          sorted(set(blks)))
+            self._drop_pending_evictions(plane, sts, evicted)
         for st in sts:
             if sel_pairs[st.req.req_id]:
                 self.scheduler.observe_selection(st.req,
                                                  sel_pairs[st.req.req_id])
         return loads
+
+    def _drop_pending_evictions(self, plane: DevicePoolPlane,
+                                sts: List[_ReqState],
+                                pending: Dict[str, set],
+                                protect: Optional[Tuple[int, Dict[str, List[int]]]] = None) -> None:
+        """Physically zero LRU-evicted blocks on device, mutating `pending`
+        ((layer, block) keys per request) in place.
+
+        A key is skipped (kept pending) when it was re-loaded since eviction
+        (LRU-resident again) — its device data is current — or when
+        ``protect`` = (lidx, blocks_by_req) marks it as selected by the
+        attention stage ABOUT to run (staged plane: the block was evicted by
+        its own access but its device copy is valid and needed now; it is
+        dropped at the next stage boundary if still non-resident)."""
+        for st in sts:
+            rid = st.req.req_id
+            cache = self.kv_mgr.caches.get(rid)
+            if cache is None:
+                pending[rid].clear()
+                continue
+            keep: set = set()
+            by_layer: Dict[int, List[int]] = {}
+            for elidx, blk in pending[rid]:
+                if cache.resident(elidx, blk):      # re-loaded since
+                    continue
+                if (protect is not None and elidx == protect[0]
+                        and blk in protect[1].get(rid, ())):
+                    keep.add((elidx, blk))
+                    continue
+                by_layer.setdefault(elidx, []).append(blk)
+            for elidx, blks in by_layer.items():
+                layer = self._lidx_to_layer.get(elidx)
+                if layer is not None:
+                    plane.drop_blocks(rid, layer, sorted(set(blks)))
+            pending[rid] = keep
 
     def _decode_one(self, st: _ReqState) -> Tuple[int, int]:
         """Legacy sequential decode step (B=1): feed the last generated
@@ -533,15 +590,10 @@ class ServingEngine:
             st.out_tokens.append(self._sample(st))
         return self._account_selections(sts, info["selected"])
 
-    def _decode_batch_persistent(self, key: Tuple,
-                                 sts: List[_ReqState]) -> int:
-        """Tentpole hot path: requests live in a persistent
-        ``DevicePoolPlane`` — admitted once, stepped via ONE jitted bucketed
-        forward per iteration with zero per-iteration stack/unstack copies,
-        released when finished (slots reused by later admissions).  Newly
-        generated KV is written back to the host pool (fused FlashD2H) and
-        fused FlashH2D payloads land directly in device slots.  Returns
-        blocks loaded."""
+    def _plane_for(self, key: Tuple, sts: List[_ReqState]) -> DevicePoolPlane:
+        """Get (or create) the group's DevicePoolPlane and admit any of
+        `sts` not yet resident — the only full-pool copy in a request's
+        decode lifetime; the plane owns the state afterwards."""
         plane = self.planes.get(key)
         if plane is None:
             plane = self.planes[key] = DevicePoolPlane(
@@ -552,6 +604,19 @@ class ServingEngine:
                 plane.admit(rid, st.decode_state)
                 st.decode_state = None           # the plane owns it now
                 self._req_plane[rid] = plane
+        return plane
+
+    def _decode_batch_persistent(self, key: Tuple,
+                                 sts: List[_ReqState]) -> int:
+        """Fused plane: requests live in a persistent ``DevicePoolPlane`` —
+        admitted once, stepped via ONE jitted bucketed forward per iteration
+        with zero per-iteration stack/unstack copies, released when finished
+        (slots reused by later admissions).  Newly generated KV is written
+        back to the host pool (fused FlashD2H) and fused FlashH2D payloads
+        land directly in device slots — but only AFTER the forward that
+        selected them, which is why ``drop_evicted_device_blocks`` is not
+        oracle-exact here (use the staged plane).  Returns blocks loaded."""
+        plane = self._plane_for(key, sts)
         tok_by_req = {st.req.req_id: st.out_tokens[-1] for st in sts}
         logits, info, prev = plane.step(self.params, tok_by_req)
         self.decode_step_calls += 1
@@ -585,6 +650,103 @@ class ServingEngine:
             if pool is not None:
                 pool.flush()
 
+    def _decode_batch_staged(self, key: Tuple, sts: List[_ReqState]) -> int:
+        """Tentpole hot path: the staged per-layer pipeline over the
+        persistent device plane — select -> restore -> attend per attention
+        layer (``DevicePoolPlane.step_staged``).
+
+        Between a layer's DSA selection and its attention, the stage
+        callback below (host side) does, in order:
+
+        1. FlashD2H write-back of THIS layer's just-appended KV (one fused
+           save + flush) so DRAM stays a byte-exact superset of device KV
+           before any restore of the layer;
+        2. LRU residency for the layer's selections
+           (``KVCacheManager.access_layer``), ONE fused FlashH2D load of
+           the misses, and a fused scatter of the payloads into the plane's
+           slots — the restore lands BEFORE the attention that selected the
+           blocks, which is what makes ``drop_evicted_device_blocks``
+           oracle-exact on this plane;
+        3. physical drop of this access round's LRU evictions, except
+           blocks the imminent attention selected (deferred one stage).
+
+        Returns blocks loaded; per-layer restore bytes are accumulated in
+        ``_staged_layer_bytes`` for the max(compute, transfer) overlap
+        charge."""
+        plane = self._plane_for(key, sts)
+        tok_by_req = {st.req.req_id: st.out_tokens[-1] for st in sts}
+        req_ids = [st.req.req_id for st in sts]
+        sel_pairs: Dict[str, List[Tuple[int, int]]] = \
+            {rid: [] for rid in req_ids}
+        pending_evict: Dict[str, set] = {rid: set() for rid in req_ids}
+        drop = self.eng.drop_evicted_device_blocks
+        per_block_bytes = (self.geom.block_bytes_per_head
+                           * self.geom.num_kv_heads)
+        loads_total = [0]
+
+        def stage_cb(layer: int, sel: np.ndarray,
+                     prev: Dict[str, int]) -> None:
+            lidx = self._attn_layer_index(layer)
+            if self.eng.decode_write_back:
+                # FlashD2H phase for THIS layer only (per-layer pipeline)
+                k, v = plane.new_token_kv(req_ids, prev,
+                                          layers=[layer])[layer]
+                self.kv_mgr.save_new_tokens_fused(lidx, {
+                    rid: (prev[rid], k[i][:, None, :],
+                          None if v is None else v[i][:, None, :])
+                    for i, rid in enumerate(req_ids)})
+                for rid in req_ids:
+                    pool = self.kv_mgr.pools.get(rid)
+                    if pool is not None:
+                        pool.flush()
+            if sel is None:          # DSA off: nothing to stage or restore
+                return
+            blocks_by_req: Dict[str, List[int]] = {}
+            for st in sts:
+                rid = st.req.req_id
+                blocks = dsa_mod.selected_block_ids(sel[plane.rows[rid]])
+                blocks_by_req[rid] = blocks
+                sel_pairs[rid].extend((lidx, x) for x in blocks)
+            missing_by_req, evicted_by_req = self.kv_mgr.access_layer(
+                lidx, blocks_by_req, drain_evicted=drop)
+            for rid, ev in evicted_by_req.items():
+                pending_evict[rid].update(ev)
+            loads_total[0] += sum(len(m) for m in missing_by_req.values())
+            if missing_by_req:
+                self._staged_layer_bytes[layer] = (
+                    self._staged_layer_bytes.get(layer, 0)
+                    + sum(len(m) for m in missing_by_req.values())
+                    * per_block_bytes)
+                payloads = self.kv_mgr.load_blocks_fused(lidx,
+                                                         missing_by_req)
+                if self.eng.decode_write_back:
+                    plane.restore_blocks_fused(
+                        layer, {rid: (missing_by_req[rid], k, v)
+                                for rid, (k, v) in payloads.items()},
+                        before_use=True)
+            if drop:
+                self._drop_pending_evictions(plane, sts, pending_evict,
+                                             protect=(lidx, blocks_by_req))
+            if self.staged_probe is not None:
+                self.staged_probe(self, plane, layer, sts, blocks_by_req)
+
+        logits, info, prev = plane.step_staged(self.params, tok_by_req,
+                                               stage_cb)
+        self.decode_step_calls += 1
+        self.decode_tokens += len(sts)
+        if drop:
+            # evictions deferred past their own attend stage: safe to zero
+            # now that every layer's compute has run
+            self._drop_pending_evictions(plane, sts, pending_evict)
+        for st in sts:
+            row = plane.rows[st.req.req_id]
+            st.last_logits = logits[row:row + 1]
+            st.out_tokens.append(self._sample(st))
+            if sel_pairs[st.req.req_id]:
+                self.scheduler.observe_selection(st.req,
+                                                 sel_pairs[st.req.req_id])
+        return loads_total[0]
+
     # ------------------------------------------------------------------
     # Iteration
     # ------------------------------------------------------------------
@@ -595,10 +757,13 @@ class ServingEngine:
         Order within the iteration: admit arrivals -> schedule (Algorithm 1
         working-set admission) -> prefill segments (layer-segmented prefill
         FlashD2H-saves each layer's KV to DRAM and evicts it from HBM) ->
-        batched decode forward -> FlashD2H write-back of the new KV ->
-        sample -> DSA selection accounting (LRU residency; misses load via
-        ONE fused FlashH2D per layer, landing in the device plane's slots)
-        -> finish/release -> charge time.
+        batched decode -> sample -> finish/release -> charge time.  On the
+        staged plane (default) the decode phase interleaves per attention
+        layer: select -> FlashD2H write-back of that layer's new KV -> DSA
+        selection accounting (LRU residency; misses load via ONE fused
+        FlashH2D, landing in the device plane's slots BEFORE the layer's
+        attention) -> attend.  The fused planes run one forward and do
+        write-back + selection accounting afterwards.
 
         Time is charged from the analytic cost model in engine-clock
         seconds (``charge_real_time=True`` uses wall clock); transfer stats
@@ -613,6 +778,7 @@ class ServingEngine:
             return None
         t0 = time.perf_counter()
         iter_loads = 0
+        self._staged_layer_bytes = {}
 
         # --- prefill segments ------------------------------------------
         t_prefill = 0.0
@@ -664,7 +830,9 @@ class ServingEngine:
                     st.group_key = self._decode_group_key(st)
                 groups.setdefault(st.group_key, []).append(st)
             for key, sts in groups.items():
-                if self.eng.decode_plane == "persistent":
+                if self.eng.decode_plane == "staged":
+                    iter_loads += self._decode_batch_staged(key, sts)
+                elif self.eng.decode_plane == "persistent":
                     iter_loads += self._decode_batch_persistent(key, sts)
                 else:
                     iter_loads += self._decode_batch(sts)
@@ -690,13 +858,24 @@ class ServingEngine:
         else:
             attended = min(self.cfg.dsa.token_budget, 1 << 30) \
                 if self.cfg.dsa.enabled else 4096
-            t_dec = cm.decode_time(self.hw, self.mc,
-                                   max(len(plan.decode_reqs), 1), attended) \
-                if plan.decode_reqs else 0.0
-            t_load = cm.fused_transfer_time(
-                self.hw, iter_loads * self.geom.block_bytes_per_head
-                * self.geom.num_kv_heads) if iter_loads else 0.0
-            t_iter = t_dec + t_load + t_prefill
+            if (plan.decode_reqs and self.eng.batched_decode
+                    and self.eng.decode_plane == "staged"):
+                # staged pipeline: per layer, H2D restores overlap compute
+                # -> charge max(compute, transfer) per layer, not the sum
+                t_dec = cm.overlapped_decode_time(
+                    self.hw, self.mc, max(len(plan.decode_reqs), 1),
+                    attended,
+                    [self._staged_layer_bytes.get(l, 0)
+                     for l in range(self.cfg.num_layers)])
+                t_iter = t_dec + t_prefill
+            else:
+                t_dec = cm.decode_time(
+                    self.hw, self.mc, max(len(plan.decode_reqs), 1),
+                    attended) if plan.decode_reqs else 0.0
+                t_load = cm.fused_transfer_time(
+                    self.hw, iter_loads * self.geom.block_bytes_per_head
+                    * self.geom.num_kv_heads) if iter_loads else 0.0
+                t_iter = t_dec + t_load + t_prefill
         self.now += max(t_iter, 1e-9)
         # stamp the times that were logically produced "at end of iteration"
         for req in plan.decode_reqs + [r for r, _ in plan.prefill_reqs]:

@@ -1,7 +1,8 @@
 """Batched multi-request decode: equivalence with the sequential loop,
-padded-batch stack/unstack invariants, fused FlashH2D call scaling, and the
-persistent DevicePoolPlane hot path (slot reuse, bounded jit retraces,
-zero per-iteration stack/unstack, FlashD2H write-back coherence)."""
+padded-batch stack/unstack invariants, fused FlashH2D call scaling, the
+DevicePoolPlane hot paths (slot reuse, bounded jit retraces, zero
+per-iteration stack/unstack, FlashD2H write-back coherence), and the staged
+plane's eviction-pressure oracle-exactness (restores land before use)."""
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -151,32 +152,38 @@ def test_batched_decode_groups_by_encoder_length(smoke_setup):
     assert e_b.decode_step_calls < e_s.decode_step_calls
 
 
-def test_persistent_matches_stacked_oracle(smoke_setup, mixed_runs):
-    """Acceptance: greedy outputs of the persistent plane (the default)
-    match the legacy stack/unstack path on the same workload."""
+def test_staged_matches_persistent_and_stacked_oracles(smoke_setup,
+                                                       mixed_runs):
+    """Acceptance: greedy outputs of the staged plane (the default) match
+    both the fused persistent plane and the legacy stack/unstack path on
+    the same workload."""
     cfg, params = smoke_setup("qwen2-0.5b")
-    (e_p, toks_p), _ = mixed_runs                 # persistent (default)
+    (e_p, toks_p), _ = mixed_runs                 # staged (default)
+    assert e_p.eng.decode_plane == "staged"
+    e_fu, toks_fu = _run_engine(cfg, params, True, (48, 96, 72),
+                                decode_plane="persistent")
     e_st, toks_st = _run_engine(cfg, params, True, (48, 96, 72),
                                 decode_plane="stacked")
-    assert toks_p == toks_st
-    # the persistent path never stacks/unstacks; the legacy path does every
+    assert toks_p == toks_fu == toks_st
+    # neither device plane ever stacks/unstacks; the legacy path does every
     # decode iteration
-    assert e_p.stack_calls == 0
+    assert e_p.stack_calls == e_fu.stack_calls == 0
     assert e_st.stack_calls > 0
     assert e_st.stack_calls == e_st.decode_step_calls
 
 
-def test_persistent_engine_retraces_bounded_by_buckets(mixed_runs):
+def test_staged_engine_retraces_bounded_by_buckets(mixed_runs):
     """jit retrace count == distinct shape signatures (every repeat shape
-    is a compile-cache hit), and the engine only ever steps at policy
-    bucket shapes — so compiles are bounded by the bucket grid, not the
-    iteration count."""
+    is a compile-cache hit) for the per-stage jits, and the engine only
+    ever steps at policy bucket shapes — so compiles stay bounded by
+    (stage kinds x bucket grid), never the iteration count, even though
+    per-iteration LAUNCHES are O(num_layers)."""
     (e_p, _), _ = mixed_runs
-    assert e_p.eng.decode_plane == "persistent"
+    assert e_p.eng.decode_plane == "staged"
     [plane] = e_p.planes.values()
-    fn = plane.decode_fn
-    # exact cache-hit invariant: one XLA trace per distinct input shape
-    assert fn.trace_count == len(fn.shape_signatures)
+    fns = plane.staged_fns
+    # exact cache-hit invariant: one XLA trace per distinct (stage, shape)
+    assert fns.trace_count == len(fns.shape_signatures)
     pol = e_p.eng.bucketing
     assert plane.buckets_seen                 # the plane actually stepped
     for b_cap, nb_cap in plane.buckets_seen:
@@ -185,6 +192,34 @@ def test_persistent_engine_retraces_bounded_by_buckets(mixed_runs):
     # steady state: strictly fewer distinct buckets than iterations, i.e.
     # most iterations were compile-cache hits
     assert len(plane.buckets_seen) < plane.steps
+
+
+def test_persistent_engine_retraces_bounded_by_buckets(smoke_setup):
+    """Same invariant for the fused persistent plane's single decode jit."""
+    cfg, params = smoke_setup("qwen2-0.5b")
+    e_p, _ = _run_engine(cfg, params, True, (48, 96, 72),
+                         decode_plane="persistent")
+    [plane] = e_p.planes.values()
+    fn = plane.decode_fn
+    assert fn.trace_count == len(fn.shape_signatures)
+    assert len(plane.buckets_seen) < plane.steps
+
+
+def test_staged_launches_per_iteration_o_num_layers(smoke_setup):
+    """The staged pipeline costs a BOUNDED number of jitted launches per
+    iteration: embed + (select + attend) per attention layer + one per
+    recurrent layer + logits — O(num_layers), independent of batch size
+    and iteration count."""
+    cfg, params = smoke_setup("qwen2-0.5b")
+    from repro.core.device_pool import staged_fns_for
+    fns = staged_fns_for(cfg, "ref")
+    calls0 = fns.calls
+    eng, _ = _run_engine(cfg, params, True, (48, 48), gen=6)
+    n_attn = cfg.num_attention_layers()
+    n_rec = cfg.num_layers - n_attn
+    per_iter = 2 + 2 * n_attn + n_rec            # embed+logits+stages
+    assert fns.calls - calls0 == per_iter * eng.decode_step_calls
+    assert fns.trace_count == len(fns.shape_signatures)
 
 
 def test_plane_slot_reuse_mid_batch(smoke_setup):
@@ -262,6 +297,117 @@ def test_drop_evicted_device_blocks_runs_and_drops(smoke_setup):
     assert sum(p.blocks_restored for p in planes) > 0
 
 
+# ---------------------------------------------------------------------------
+# Eviction-pressure equivalence (the staged plane's tentpole guarantee)
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def evict_runs(smoke_setup):
+    """Runs under an HBM budget (1-block LRU) that forces evictions every
+    decode iteration: staged (default, physical drops auto-ON) + the three
+    oracles + the fused plane with physical drops."""
+    cfg, params = smoke_setup("qwen2-0.5b")
+    kw = dict(gen=8, hbm_blocks_per_request=1)
+    return {
+        "staged": _run_engine(cfg, params, True, (64, 64, 64), **kw),
+        "persistent": _run_engine(cfg, params, True, (64, 64, 64),
+                                  decode_plane="persistent", **kw),
+        "stacked": _run_engine(cfg, params, True, (64, 64, 64),
+                               decode_plane="stacked", **kw),
+        "sequential": _run_engine(cfg, params, False, (64, 64, 64), **kw),
+        "fused_drop": _run_engine(cfg, params, True, (64, 64, 64),
+                                  decode_plane="persistent",
+                                  drop_evicted_device_blocks=True, **kw),
+    }
+
+
+def test_staged_oracle_exact_under_eviction_pressure(evict_runs):
+    """Acceptance: the staged plane — with drop_evicted_device_blocks
+    resolved ON by default, physically zeroing device blocks every
+    iteration — produces greedy tokens identical to all three oracles,
+    because per-layer restores land BEFORE the attention that selected
+    them."""
+    e, toks = evict_runs["staged"]
+    assert e.eng.drop_evicted_device_blocks        # auto-resolved ON
+    for oracle in ("persistent", "stacked", "sequential"):
+        assert toks == evict_runs[oracle][1], oracle
+    # the pressure was real: >= 1 LRU eviction per decode iteration, and
+    # the drops/restores actually touched device memory
+    s = e.transfer_stats()
+    assert s.evictions >= e.decode_step_calls
+    [plane] = e.planes.values()
+    assert plane.blocks_dropped > 0
+    assert plane.blocks_restored > 0
+    # every restore landed in the select->attend window (before use)
+    assert plane.blocks_restored_before_use == plane.blocks_restored
+
+
+def test_fused_plane_drop_is_not_oracle_exact(evict_runs):
+    """The same workload on the FUSED plane with physical drops diverges:
+    select and attend run in one launch, so a re-selected evicted block can
+    only be restored after the forward already read zeros.  This is the
+    failure mode the staged pipeline exists to fix."""
+    _, toks_oracle = evict_runs["stacked"]
+    e_fd, toks_fd = evict_runs["fused_drop"]
+    [plane] = e_fd.planes.values()
+    assert plane.blocks_dropped > 0                # drops really happened
+    assert plane.blocks_restored_before_use == 0   # ...and never in-window
+    assert toks_fd != toks_oracle
+
+
+def test_staged_transfer_accounting_matches_stacked(evict_runs):
+    """Blocks moved (bytes, misses, evictions) must not depend on the
+    decode plane; the staged pipeline keeps the one-fused-launch-per-layer
+    call shape."""
+    (e_s, _), (e_st, _) = evict_runs["staged"], evict_runs["stacked"]
+    s_s, s_st = e_s.transfer_stats(), e_st.transfer_stats()
+    assert s_s.h2d_blocks == s_st.h2d_blocks
+    assert s_s.h2d_bytes == s_st.h2d_bytes
+    assert s_s.misses == s_st.misses
+    assert s_s.evictions == s_st.evictions
+    # at most one fused FlashH2D launch per attention layer per iteration
+    assert s_s.h2d_calls <= e_s.geom.num_layers * e_s.iterations
+
+
+def test_staged_restore_ordering_no_stale_attended_blocks(smoke_setup):
+    """Satellite assertion: in the restore->attend window of EVERY layer of
+    EVERY iteration, each block the attention is about to read is
+    byte-identical to its host copy — in particular, no attended block is
+    zero on device while its host copy is nonzero (the fused plane's
+    failure mode under drops)."""
+    cfg, params = smoke_setup("qwen2-0.5b")
+    eng = ServingEngine(params, cfg, EngineConfig(
+        chunk_size=64, r_max=4, hbm_blocks_per_request=1))
+    assert eng.eng.drop_evicted_device_blocks
+    checked = [0]
+
+    def probe(engine, plane, layer, sts, blocks_by_req):
+        lidx = engine._attn_layer_index(layer)
+        c = plane.state["caches"][layer]
+        for st in sts:
+            rid = st.req.req_id
+            row = plane.rows[rid]
+            host = engine.kv_mgr.pools[rid]
+            for b in blocks_by_req[rid]:
+                dev_k = np.asarray(c["k"][row, :, b])
+                np.testing.assert_array_equal(dev_k, host.k[lidx, :, b])
+                if np.any(host.k[lidx, :, b]):
+                    assert np.any(dev_k), (layer, b)
+                np.testing.assert_array_equal(np.asarray(c["v"][row, :, b]),
+                                              host.v[lidx, :, b])
+                checked[0] += 1
+
+    eng.staged_probe = probe
+    rng = np.random.default_rng(7)
+    for p in (64, 64):
+        eng.submit(Request(prompt_len=p, max_new_tokens=6),
+                   tokens=rng.integers(4, cfg.vocab_size, p).astype(np.int32))
+    eng.run()
+    assert checked[0] > 0
+    [plane] = eng.planes.values()
+    assert plane.blocks_dropped > 0       # the window was actually exercised
+
+
 def test_batched_decode_on_hybrid_arch(smoke_setup):
     """Recurrent (mamba) layer states batch alongside paged attn pools."""
     cfg, params = smoke_setup("jamba-v0.1-52b")
@@ -269,6 +415,10 @@ def test_batched_decode_on_hybrid_arch(smoke_setup):
     e_s, toks_s = _run_engine(cfg, params, False, (48, 64), gen=4)
     assert toks_b == toks_s
     assert e_b.decode_step_calls < e_s.decode_step_calls
+    # Algorithm 1 working-set estimates count only layers with paged KV:
+    # jamba-smoke has 2 model layers but 1 attention layer
+    assert e_b.scheduler.num_attn_layers == cfg.num_attention_layers()
+    assert e_b.scheduler.num_attn_layers < cfg.num_layers
 
 
 def test_moe_capacity_does_not_couple_batched_requests(smoke_setup):

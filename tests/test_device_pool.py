@@ -122,6 +122,84 @@ def test_stepped_subset_matches_solo_decode(smoke_setup):
                                    rtol=1e-5, atol=1e-5)
 
 
+def test_staged_step_matches_fused_step(smoke_setup):
+    """The staged per-layer pipeline (select -> attend per layer, separate
+    jits) computes the same logits and state updates as the fused one-launch
+    ``step`` — the numeric backbone of the plane-equivalence guarantee."""
+    cfg, params = smoke_setup("qwen2-0.5b")
+    pf, ps = DevicePoolPlane(cfg), DevicePoolPlane(cfg)
+    for plane in (pf, ps):
+        plane.admit("a", _prefill_state(cfg, params, 40, 4))
+        plane.admit("b", _prefill_state(cfg, params, 33, 4, seed=1))
+    lg_f, info_f, prev_f = pf.step(params, {"a": 7, "b": 9})
+    lg_s, info_s, prev_s = ps.step_staged(params, {"a": 7, "b": 9})
+    assert prev_f == prev_s
+    assert sorted(info_f["selected"]) == sorted(info_s["selected"])
+    np.testing.assert_allclose(np.asarray(lg_f), np.asarray(lg_s),
+                               rtol=1e-5, atol=1e-5)
+    for rid in ("a", "b"):
+        for x, y in zip(jax.tree.leaves(pf.extract(rid)),
+                        jax.tree.leaves(ps.extract(rid))):
+            np.testing.assert_allclose(np.asarray(x), np.asarray(y),
+                                       rtol=1e-5, atol=1e-5)
+
+
+def test_staged_restore_lands_between_select_and_attend(smoke_setup):
+    """Dropped device blocks restored in the stage callback are read by the
+    SAME iteration's attention: a step over a pool with blocks zeroed +
+    in-window restores matches a step over the never-dropped pool."""
+    cfg, params = smoke_setup("qwen2-0.5b")
+    clean, dropped = DevicePoolPlane(cfg), DevicePoolPlane(cfg)
+    for plane in (clean, dropped):
+        plane.admit("a", _prefill_state(cfg, params, 64, 4))
+    layers = dropped.pool_layers()
+    blocks = [0, 1]           # full blocks (cur_len=64 appends to block 2)
+    host = {}                 # the DRAM copies the restores come from
+    row = dropped.rows["a"]
+    for l in layers:
+        c = dropped.state["caches"][l]
+        host[l] = (np.asarray(gather_row_blocks(c["k"], row, blocks)),
+                   np.asarray(gather_row_blocks(c["v"], row, blocks)))
+        dropped.drop_blocks("a", l, blocks)
+
+    def stage_cb(layer, sel, prev):
+        k, v = host[layer]
+        dropped.restore_blocks_fused(
+            layer, {"a": (blocks, k, v)}, before_use=True)
+
+    lg_clean, _, _ = clean.step_staged(params, {"a": 7})
+    lg_drop, _, _ = dropped.step_staged(params, {"a": 7}, stage_cb)
+    np.testing.assert_allclose(np.asarray(lg_drop), np.asarray(lg_clean),
+                               rtol=1e-5, atol=1e-5)
+    assert dropped.blocks_restored_before_use == len(layers) * len(blocks)
+    _assert_states_equal(dropped.extract("a"), clean.extract("a"))
+
+
+def test_staged_launches_o_num_layers_traces_bounded(smoke_setup):
+    """Per-iteration launch count is exactly embed + 2 x attn layers +
+    recurrent layers + logits; traces stay one per (stage, shape bucket)."""
+    cfg, params = smoke_setup("qwen2-0.5b")
+    cfg = dataclasses.replace(cfg, name=cfg.name + "-staged-retrace")
+    plane = DevicePoolPlane(cfg, BucketingPolicy(batch_buckets=(1, 2, 4),
+                                                 block_bucket=4))
+    fns = plane.staged_fns
+    assert fns.calls == 0 and fns.trace_count == 0
+    per_iter = 2 + 2 * cfg.num_attention_layers() \
+        + (cfg.num_layers - cfg.num_attention_layers())
+    plane.admit("a", _prefill_state(cfg, params, 40, 4))
+    for tok in (5, 6, 7):
+        plane.step_staged(params, {"a": tok})
+    assert fns.calls == 3 * per_iter
+    n_stage_kinds = 4                       # embed, select, attend, logits
+    assert fns.trace_count == n_stage_kinds          # one bucket so far
+    plane.admit("b", _prefill_state(cfg, params, 33, 4, seed=1))
+    plane.step_staged(params, {"a": 5, "b": 6})
+    plane.step_staged(params, {"b": 6})     # occupancy change: no retrace
+    assert fns.trace_count == 2 * n_stage_kinds      # b_cap=2 bucket
+    assert fns.trace_count == len(fns.shape_signatures)
+    assert fns.calls == 5 * per_iter                 # 5 steps total
+
+
 def test_jit_retraces_bounded_by_buckets(smoke_setup):
     """The cache-hit invariant: one XLA trace per distinct shape bucket,
     never per iteration or per occupancy change."""

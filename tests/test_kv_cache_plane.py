@@ -111,3 +111,58 @@ def test_load_blocks_still_accounts_for_single_request_use():
     assert k.shape == (2, 2, 8, 4)
     assert pool.stats.h2d_calls == 1
     assert pool.stats.h2d_blocks == 2 * g.num_kv_heads
+
+
+def test_access_layer_books_residency_and_drains_evictions():
+    """The per-layer control-plane call the decode planes share: misses per
+    request, no transfer accounting, optional eviction drain."""
+    g = geom()
+    mgr = KVCacheManager(g, hbm_budget_bytes=1 << 20)
+    mgr.register("r1", max_tokens=64, hbm_blocks_per_request=2)
+    mgr.caches["r1"].track_evictions = True
+    missing, evicted = mgr.access_layer(0, {"r1": [0, 1], "gone": [5]},
+                                        drain_evicted=True)
+    assert missing == {"r1": [0, 1]}           # unknown request skipped
+    assert evicted == {"r1": []}
+    missing, evicted = mgr.access_layer(0, {"r1": [2, 3]},
+                                        drain_evicted=True)
+    assert missing == {"r1": [2, 3]}
+    assert set(evicted["r1"]) == {(0, 0), (0, 1)}     # 2-block LRU overflow
+    s = mgr.total_stats()
+    assert s.h2d_calls == 0 and s.h2d_bytes == 0      # residency only
+    assert s.misses == 4 and s.evictions == 2
+
+
+# ---------------------------------------------------------------------------
+# Hybrid working-set estimation: recurrent layers hold no paged KV
+# ---------------------------------------------------------------------------
+
+def test_hybrid_ws_estimates_count_attention_layers_only():
+    """Jamba-style configs: the geometry tracks the 1 attention layer of a
+    2-layer model; Algorithm 1's estimates must scale by THAT count, not the
+    model depth, or hybrid batches get over-throttled."""
+    from repro.core.scheduler import Scheduler, SchedulerConfig
+    from repro.core.working_set import (DecodeWorkingSet,
+                                        estimate_decode_ws_bytes,
+                                        estimate_prefill_ws_bytes)
+    from repro.serving.request import Phase, Request
+
+    g_attn = geom(layers=1)                  # attention-only geometry
+    per_lb = g_attn.block_bytes_per_head * g_attn.num_kv_heads
+    sched = Scheduler(SchedulerConfig(), g_attn, num_layers=2,
+                      top_k_blocks=8)
+    assert sched.num_attn_layers == 1        # defaults to geom.num_layers
+    req = Request(prompt_len=64, max_new_tokens=4)
+    req.phase = Phase.DECODE
+    # cold-start worst case: top-k blocks per ATTENTION layer (x1, not x2)
+    assert sched._estimate_ws(req) == 8 * 1 * per_lb
+    assert estimate_decode_ws_bytes(DecodeWorkingSet(g_attn), g_attn,
+                                    8, 1) == 8 * per_lb
+    # chunked prefill WS likewise scales by the attention-layer count; a
+    # full-model geometry can override explicitly
+    g_full = geom(layers=2)
+    assert estimate_prefill_ws_bytes(g_full, 128, "chunked",
+                                     num_attn_layers=1) == \
+        estimate_prefill_ws_bytes(g_full, 128, "layer_segmented")
+    assert estimate_prefill_ws_bytes(g_full, 128, "chunked") == \
+        2 * estimate_prefill_ws_bytes(g_full, 128, "layer_segmented")
