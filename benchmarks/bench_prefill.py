@@ -8,6 +8,11 @@
     exact attention FLOP accounting.
 (c) REAL-execution cross-check on the tiny engine: HBM peak during prefill
     (token-layer units) for both modes.
+(d) prefill_plane: the batched jitted PrefillPlane vs the legacy
+    per-request executor on the same concurrent workload — jitted launches
+    per executed segment (ONE per (layer, chunk) group vs none/legacy),
+    jit traces vs shape signatures, fused-D2H launch counts, mean TTFT
+    (modeled), and the batched HBM watermark.
 """
 from __future__ import annotations
 
@@ -94,10 +99,57 @@ def fig16c_real_hbm_peak() -> None:
                     else "prompt*layers"))
 
 
+def prefill_plane_vs_legacy() -> None:
+    """Real engine, 4 concurrent prompts: the batched plane vs the legacy
+    per-request layer-segmented executor (greedy outputs are asserted
+    token-identical in tests/test_prefill_plane.py)."""
+    header("prefill_plane: batched jitted plane vs legacy executor")
+    from repro.models import model as M
+    from repro.serving.engine import EngineConfig, ServingEngine
+    from repro.serving.request import Request
+    import numpy as np
+
+    from repro.core.prefill_plane import prefill_fns_for
+
+    cfg = get_smoke_config("qwen2-0.5b")
+    params = M.init_params(cfg, jax.random.PRNGKey(0), jnp.float32)
+    prompts = (192, 192, 160, 160)
+    fns = prefill_fns_for(cfg)          # process-global per config: report
+                                        # per-mode DELTAS, not running totals
+    for mode, kw in (("plane", {}),
+                     ("plane_chunked",
+                      {"prefill_max_tokens_per_step": 64}),
+                     ("legacy", {"prefill_exec": "legacy"})):
+        traces0 = fns.trace_count
+        eng = ServingEngine(params, cfg, EngineConfig(
+            r_max=4, max_inject_tokens=8192, **kw))
+        rng = np.random.default_rng(0)
+        for p in prompts:
+            eng.submit(Request(prompt_len=p, max_new_tokens=2),
+                       tokens=rng.integers(4, cfg.vocab_size,
+                                           p).astype(np.int32))
+        m = eng.run()
+        n_segments = cfg.num_layers * sum(
+            -(-p // (kw.get("prefill_max_tokens_per_step") or p))
+            for p in prompts)
+        emit("prefill_plane", mode=mode,
+             launches=eng.prefill_launches,
+             segments=n_segments,
+             launches_per_segment=round(
+                 eng.prefill_launches / max(n_segments, 1), 3),
+             jit_traces=fns.trace_count - traces0,
+             jit_cache_hit=int(fns.trace_count
+                               == len(fns.shape_signatures)),
+             d2h_calls=eng.transfer_stats().d2h_calls,
+             mean_ttft_s=round(m.mean_ttft, 6),
+             hbm_peak_token_layers=eng.prefill_hbm_peak_tokens)
+
+
 def main() -> None:
     fig16a_ttft()
     fig16b_attention_overhead()
     fig16c_real_hbm_peak()
+    prefill_plane_vs_legacy()
 
 
 if __name__ == "__main__":

@@ -66,16 +66,22 @@ USE_PALLAS_PLANE = os.environ.get("REPRO_PLANE_KERNEL", "0") == "1"
 
 @dataclasses.dataclass(frozen=True)
 class BucketingPolicy:
-    """Shape-bucketing policy for the jitted batched decode step.
+    """Shape-bucketing policy for the jitted batched decode step and the
+    batched prefill plane.
 
     batch_buckets: allowed padded batch-row counts; demand beyond the last
         bucket doubles it (8 -> 16 -> 32 ...).
     block_bucket: pool block capacity is rounded UP to a multiple of this,
         so admitting a slightly-longer request reuses the compiled bucket
         instead of retracing at nb, nb+1, nb+2, ...
+    token_bucket: prefill-plane token-length grid — segment windows (and
+        row capacities) round up to token_bucket, then DOUBLE (64, 128,
+        256, ...), so the number of distinct compiled token lengths is
+        logarithmic in the longest prompt.
     """
     batch_buckets: Tuple[int, ...] = (1, 2, 4, 8)
     block_bucket: int = 8
+    token_bucket: int = 64
 
     def bucket_batch(self, n: int) -> int:
         for b in self.batch_buckets:
@@ -89,6 +95,49 @@ class BucketingPolicy:
     def bucket_blocks(self, nb: int) -> int:
         bb = self.block_bucket
         return max(bb, -(-nb // bb) * bb)
+
+    def bucket_tokens(self, n: int) -> int:
+        t = self.token_bucket
+        while t < n:
+            t *= 2
+        return t
+
+
+class StageFns:
+    """Shared plumbing for per-stage jit registries (the staged decode
+    plane's ``_StagedDecodeFns`` and the prefill plane's ``_PrefillFns``):
+    ``wrap`` builds a jitted stage whose trace-time side effect counts XLA
+    compiles and whose call-time hook records (stage, arg pytree
+    structure, leaf shapes/dtypes) — so ``trace_count ==
+    len(shape_signatures)`` is the cache-hit invariant tests assert for
+    every registry.  The pytree STRUCTURE is part of the signature because
+    optional args (enc_kv, ctx, DSA idx) may be None: two calls whose
+    leaves coincide but whose structures differ trace separately.
+    Donation applies on accelerator backends only (CPU buffers are not
+    donatable and would only emit a warning per compile)."""
+
+    def __init__(self):
+        self.trace_count = 0
+        self.calls = 0                      # jitted stage launches, total
+        self.shape_signatures: set = set()
+        self._donate_ok = jax.default_backend() != "cpu"
+
+    def wrap(self, stage, f, donate=()):
+        def fn(*args):
+            self.trace_count += 1           # trace-time side effect only
+            return f(*args)
+        jitted = jax.jit(fn,
+                         donate_argnums=donate if self._donate_ok else ())
+
+        def call(*args):
+            self.calls += 1
+            leaves, treedef = jax.tree.flatten(args)
+            self.shape_signatures.add(
+                (stage, str(treedef),
+                 tuple((tuple(jnp.shape(leaf)), str(jnp.result_type(leaf)))
+                       for leaf in leaves)))
+            return jitted(*args)
+        return call
 
 
 class _DecodeFn:
@@ -146,7 +195,7 @@ def decode_fn_for(cfg, attn_impl: str) -> _DecodeFn:
     return _DECODE_FNS[key]
 
 
-class _StagedDecodeFns:
+class _StagedDecodeFns(StageFns):
     """Per-stage jits for the STAGED decode pipeline: embed, per-layer
     select / attend (attention layers), per-layer recurrent (mamba/rwkv),
     and the final logits stage.
@@ -155,32 +204,15 @@ class _StagedDecodeFns:
     all structurally identical layers — per-iteration jitted LAUNCHES are
     O(num_layers) but TRACES stay bounded by (distinct layer structures x
     shape buckets), the same cache-hit invariant as the fused ``_DecodeFn``:
-    ``trace_count == len(shape_signatures)``.
+    ``trace_count == len(shape_signatures)`` (see ``StageFns``; pool
+    buffers are donated so XLA updates them in place on accelerators).
     """
 
     def __init__(self, cfg, attn_impl: str):
+        super().__init__()
         self.cfg = cfg
         self.attn_impl = attn_impl
-        self.trace_count = 0
-        self.calls = 0                      # jitted stage launches, total
-        self.shape_signatures: set = set()
-        # like _DecodeFn: donate the mutated pool buffers so XLA updates
-        # them in place on accelerator backends (CPU buffers not donatable)
-        on_accel = jax.default_backend() != "cpu"
-
-        def wrap(stage, f, donate=()):
-            def fn(*args):
-                self.trace_count += 1       # trace-time side effect only
-                return f(*args)
-            jitted = jax.jit(fn, donate_argnums=donate if on_accel else ())
-
-            def call(*args):
-                self.calls += 1
-                self.shape_signatures.add(
-                    (stage,) + tuple((tuple(leaf.shape), str(leaf.dtype))
-                                     for leaf in jax.tree.leaves(args)))
-                return jitted(*args)
-            return call
+        wrap = self.wrap
 
         self.embed = wrap("embed",
                           lambda params, tokens:

@@ -368,20 +368,22 @@ class KVCacheManager:
                               kv_by_req: Dict[str, Tuple[int, np.ndarray,
                                                          Optional[np.ndarray]]]
                               ) -> None:
-        """ONE fused FlashD2H save of this iteration's newly generated KV
-        for `layer` across the whole decode batch (persistent-plane hot
-        path).
+        """ONE fused FlashD2H save of this iteration's newly produced KV
+        for `layer` across a whole batch — the decode planes' per-layer
+        write-back AND the prefill plane's per-(layer, chunk)-group save
+        (each batched prefill launch saves every request's stripe through
+        one call here, replacing the legacy per-request
+        ``save_contiguous`` loop).
 
         kv_by_req: {req_id: (start_token, k (Hkv,T,D), v or None)}.  Under
-        batched decode the per-iteration stripe is contiguous across the
-        batch, so the paper saves it with one D2H DMA per layer per
-        iteration; accordingly ``d2h_calls`` is booked ONCE here (on
-        ``fused_stats``) while each pool stages its stripe without
-        accounting (``HostPool.stage``).  The CPU-side scatter into blocks
-        still happens at each pool's ``flush``.  Keeping the host pool a
-        byte-exact superset of device KV is what makes
-        ``load_blocks_fused`` payloads safe to scatter straight into device
-        slots."""
+        batching the stripe is contiguous across the batch, so the paper
+        saves it with one D2H DMA per layer per iteration; accordingly
+        ``d2h_calls`` is booked ONCE here (on ``fused_stats``) while each
+        pool stages its stripe without accounting (``HostPool.stage``).
+        The CPU-side scatter into blocks still happens at each pool's
+        ``flush``.  Keeping the host pool a byte-exact superset of device
+        KV is what makes ``load_blocks_fused`` payloads safe to scatter
+        straight into device slots."""
         total_bytes = 0
         for req_id, (start, k, v) in kv_by_req.items():
             pool = self.pools.get(req_id)

@@ -10,7 +10,10 @@ If one layer over the whole prompt would exceed the TBT SLO, the layer is
 further split into token chunks ("combination with chunked prefill") —
 ``plan_segments`` emits (layer, chunk) steps; chunk c of layer l attends to
 chunks 0..c of the SAME layer, so the per-layer KV context is still bounded
-to one layer.
+to one layer.  The batched prefill plane (``repro.core.prefill_plane``)
+executes these chunked segments (``EngineConfig.prefill_max_tokens_per_step``
+sets the granularity); the legacy per-request executor runs whole layers
+only, which is why the engine plans whole-layer segments for it.
 
 ``max_inject_tokens`` follows the paper's fairness convention (§4.2): to
 inject the same total token work per iteration as chunked prefill with
@@ -94,10 +97,28 @@ def segment_tokens_for_iteration(prompt_len: int, num_layers: int,
 
 
 def hbm_footprint_tokens(prompt_len: int, mode: str, num_layers: int,
-                         tokens_done: int = 0) -> int:
-    """Token-layer units of KV resident in HBM during prefill (Fig. 16a
-    rationale).  chunked: tokens_done * L grows; layer-segmented: <= prompt
-    tokens of ONE layer."""
+                         tokens_done: int = 0,
+                         layer_tokens_resident: Optional[int] = None) -> int:
+    """Token-layer units of KV ONE request holds in HBM during prefill
+    (Fig. 16a rationale).
+
+    chunked: every processed token's KV of ALL layers stays resident —
+    ``tokens_done * num_layers``, growing with progress.
+
+    layer_segmented: only the CURRENT layer's KV is resident — at most
+    ``prompt_len`` token-layers (the one-layer bound).
+    ``layer_tokens_resident`` is the measured number of prompt tokens whose
+    KV of the current layer is live (the prefill plane reports its per-row
+    within-iteration peak); omitted, the bound itself is returned (the
+    legacy whole-layer executor holds exactly the full layer while a
+    segment runs).
+
+    The serving engine SUMS this over every request with live prefill state
+    each iteration and maxes the sums into
+    ``ServingEngine.prefill_hbm_peak_tokens`` — a real batched per-iteration
+    watermark for both modes, not a per-request recording."""
     if mode == "chunked":
         return tokens_done * num_layers
-    return prompt_len
+    if layer_tokens_resident is None:
+        return prompt_len
+    return min(layer_tokens_resident, prompt_len)

@@ -29,6 +29,12 @@ class SchedulerConfig:
     chunk_size: int = 2048          # chunked-prefill token chunk
     max_inject_tokens: int = 0      # layer-segmented: prefill tokens per batch
                                     # (0 -> chunk_size * num_layers, paper §4.2)
+    segment_tokens: int = 0         # layer-segmented: intra-layer chunk size
+                                    # (PrefillSegment granularity; 0 = whole
+                                    # layers).  Injections are rounded to
+                                    # whole segments so the scheduler charges
+                                    # exactly the token work the batched
+                                    # prefill plane will execute.
     ws_control: bool = True         # working-set-aware admission (WC)
 
 
@@ -122,6 +128,14 @@ class Scheduler:
                                    * r.prompt_len
                                    - r.prefill_layer_tokens_done)
                 inject = min(remaining_total, budget)
+                if cfg.segment_tokens > 0:
+                    # batched-segment charging: the prefill plane executes
+                    # whole (layer, chunk) segments, so round the injection
+                    # to segment multiples (at least one segment — the
+                    # plane's progress guarantee) and charge that
+                    seg = cfg.segment_tokens
+                    inject = min(remaining_total,
+                                 max(seg, (inject // seg) * seg))
                 work = max(1, inject // max(1, self.num_layers))
                 if tokens + work > cfg.t_max:
                     break

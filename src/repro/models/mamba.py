@@ -40,11 +40,17 @@ def init_mamba_params(cfg: ModelConfig, key: jax.Array, dtype) -> Dict:
     }
 
 
-def _causal_conv(x: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
-    """Depthwise causal conv1d.  x: (B, S, di); w: (di, dc)."""
+def _causal_conv(x: jax.Array, w: jax.Array, b: jax.Array,
+                 left: jax.Array = None) -> jax.Array:
+    """Depthwise causal conv1d.  x: (B, S, di); w: (di, dc).
+
+    left: optional (B, dc-1, di) context — the last dc-1 inputs of the
+    PRECEDING chunk (chunked layer-segmented prefill continues a layer
+    mid-sequence).  Zeros (the default) reproduce a sequence start."""
     B, S, di = x.shape
     dc = w.shape[1]
-    xp = jnp.pad(x, ((0, 0), (dc - 1, 0), (0, 0)))
+    xp = (jnp.pad(x, ((0, 0), (dc - 1, 0), (0, 0))) if left is None
+          else jnp.concatenate([left.astype(x.dtype), x], axis=1))
     out = jnp.zeros_like(x, dtype=jnp.float32)
     for j in range(dc):
         out = out + xp[:, j:j + S, :].astype(jnp.float32) * w[:, j]
@@ -90,14 +96,30 @@ def _project(p: Dict, cfg: ModelConfig, xc: jax.Array):
 
 
 def mamba_forward(p: Dict, cfg: ModelConfig, x: jax.Array,
-                  state: Dict = None, return_state: bool = False):
-    """x: (B, S, d) -> (B, S, d).  Full-sequence (train / prefill)."""
+                  state: Dict = None, return_state: bool = False,
+                  token_mask: jax.Array = None):
+    """x: (B, S, d) -> (B, S, d).  Full-sequence (train / prefill).
+
+    state: optional recurrent carry.  ``state["ssm"]`` seeds the selective
+    scan and ``state["conv"]`` is the causal-conv left context, so a layer
+    can be continued mid-sequence (chunked layer-segmented prefill); a
+    zero-initialised state reproduces a sequence start exactly.
+
+    token_mask: optional (B, S) bool for right-padded batched prefill.
+    Masked positions contribute NOTHING to the recurrence (their dt is
+    zeroed, so dA = exp(0) = 1 carries the SSM state through unchanged) and
+    the returned conv window is gathered from the last valid inputs per
+    row — the returned state equals the state of an unpadded run.  Masked
+    positions' outputs are garbage; callers mask them out."""
     di, dt_rank, ds, dc = _dims(cfg)
     B, S, d = x.shape
     xz = x @ p["in_proj"]
     x_in, z = xz[..., :di], xz[..., di:]
-    xc = jax.nn.silu(_causal_conv(x_in, p["conv_w"], p["conv_b"]))
+    left = state["conv"] if state is not None else None
+    xc = jax.nn.silu(_causal_conv(x_in, p["conv_w"], p["conv_b"], left=left))
     dt, B_ssm, C_ssm = _project(p, cfg, xc)
+    if token_mask is not None:
+        dt = dt * token_mask[..., None].astype(dt.dtype)
     A = -jnp.exp(p["A_log"])
     h0 = (state["ssm"] if state is not None
           else jnp.zeros((B, di, ds), jnp.float32))
@@ -105,9 +127,18 @@ def mamba_forward(p: Dict, cfg: ModelConfig, x: jax.Array,
     y = y.astype(x.dtype) * jax.nn.silu(z)
     out = y @ p["out_proj"]
     if return_state:
-        new_state = {"conv": x_in[:, S - (dc - 1):, :] if S >= dc - 1 else
-                     jnp.pad(x_in, ((0, 0), (dc - 1 - S, 0), (0, 0))),
-                     "ssm": h}
+        # conv window = last dc-1 VALID inputs, with the carried left
+        # context covering rows whose valid span is shorter than dc-1
+        full = jnp.concatenate(
+            [left.astype(x_in.dtype) if left is not None
+             else jnp.zeros((B, dc - 1, di), x_in.dtype), x_in], axis=1)
+        if token_mask is None:
+            new_conv = full[:, S:, :]
+        else:
+            n_valid = jnp.sum(token_mask.astype(jnp.int32), axis=1)  # (B,)
+            idx = n_valid[:, None] + jnp.arange(dc - 1)[None, :]
+            new_conv = jnp.take_along_axis(full, idx[..., None], axis=1)
+        new_state = {"conv": new_conv, "ssm": h}
         return out, new_state
     return out
 

@@ -164,12 +164,19 @@ def layer_forward(p: Dict, cfg: ModelConfig, x: jax.Array,
                   enc_kv: Optional[Tuple] = None,
                   k_ctx=None, v_ctx=None, q_offset=0,
                   triangular: bool = False,
-                  return_kv: bool = False):
+                  return_kv: bool = False,
+                  moe_drop_free: bool = False):
     """One transformer layer over a full sequence.
 
     Returns (x_out, aux_loss, layer_kv_or_None, new_rec_state_or_None).
     layer_kv: for attn layers (k, v) each (B, S, Hkv, hd) — or (latent,) for
     MLA — used by prefill to populate the paged pool.
+
+    moe_drop_free: serving prefill paths set this so MoE expert capacity
+    (a TRAINING throughput knob) cannot drop tokens — capacity scales with
+    the tokens in the forward, so a dropped token would make batched /
+    chunked / layer-segmented prefill executions diverge from each other
+    (the same convention as the decode step's drop-free MoE).
     """
     aux = jnp.zeros((), jnp.float32)
     kv_out = None
@@ -219,7 +226,8 @@ def layer_forward(p: Dict, cfg: ModelConfig, x: jax.Array,
 
     h_in = _norm(cfg, p["ffn_norm"], x)
     if "moe" in p:
-        h, aux = ffn_mod.moe_apply(p["moe"], cfg, h_in)
+        h, aux = ffn_mod.moe_apply(p["moe"], cfg, h_in,
+                                   drop_free=moe_drop_free)
     else:
         h = ffn_mod.ffn_apply(p["ffn"], h_in)
     return x + h, aux, kv_out, new_rec
@@ -549,7 +557,8 @@ def index_enc_kvs(enc_kvs, i: int):
 
 def prefill_layer(params: Dict, cfg: ModelConfig, layer_idx: int,
                   h: jax.Array, positions: jax.Array, *,
-                  rec_state=None, enc_kv=None, triangular: bool = False):
+                  rec_state=None, enc_kv=None, triangular: bool = False,
+                  moe_drop_free: bool = False):
     """Run ONE layer of prefill over the whole prompt (layer-segmented
     prefill).  The caller saves the returned per-layer KV to DRAM and evicts
     it before calling layer l+1 — bounding HBM to one layer of KV."""
@@ -558,13 +567,112 @@ def prefill_layer(params: Dict, cfg: ModelConfig, layer_idx: int,
                                           kind=layer_kind(cfg, layer_idx),
                                           rec_state=rec_state, enc_kv=enc_kv,
                                           triangular=triangular,
-                                          return_kv=True)
+                                          return_kv=True,
+                                          moe_drop_free=moe_drop_free)
     return h, kv_out, new_rec
 
 
 def prefill_finalize(params: Dict, cfg: ModelConfig, h: jax.Array):
     """Last segment: final norm + head on the last position."""
     return lm_head(params, cfg, h[:, -1:, :])[:, 0]
+
+
+# ---------------------------------------------------------------------------
+# Batched layer-segmented prefill (the PrefillPlane's stage functions)
+#
+# The prefill plane (``repro.core.prefill_plane``) batches the SAME-layer
+# segments of many requests into one jitted launch over right-padded rows.
+# These functions are the masked layer bodies it jits: ``token_mask`` marks
+# each row's real tokens (right padding), ``step_mask`` parks rows whose
+# request is not scheduled (their hidden / recurrent state comes back
+# byte-for-byte unchanged, like the decode plane's step_mask).  Exactness
+# under padding:
+#
+# * attention — causal masking alone protects real tokens (padding sits
+#   strictly AFTER every real position, so no real query ever attends to a
+#   padded key); masked lanes PRESERVE their incoming residual, so right
+#   padding stays at its admitted zeros and real tokens of later chunks
+#   that fall inside a bucketed window keep their layer-input values;
+# * recurrent (mamba/rwkv) — the masked forwards carry the recurrent state
+#   THROUGH padded steps unchanged and gather shift/conv windows from each
+#   row's last valid position, so the carried state equals an unpadded
+#   run's (see ``mamba_forward(token_mask=...)`` / ``rwkv_time_mix``);
+# * MoE — runs drop-free (expert capacity must not couple batched rows).
+# ---------------------------------------------------------------------------
+
+def prefill_attn_layer_batched(p: Dict, cfg: ModelConfig, h: jax.Array,
+                               positions: jax.Array, token_mask: jax.Array,
+                               step_mask: jax.Array, *,
+                               k_ctx=None, v_ctx=None, q_offset=0,
+                               enc_kv=None):
+    """One ATTENTION layer over a padded batch of same-layer segments.
+
+    h: (B, T, d) — the rows' residual stream over this segment's token
+    window; positions: (B, T) absolute positions; k_ctx/v_ctx: earlier
+    chunks of the SAME layer (chunked layer segments; None for chunk 0);
+    q_offset: the window's absolute start (scalar; traced, so distinct
+    chunk starts share one compile per shape).
+
+    Returns (h_out, kv_out): h_out masked (masked lanes preserve the
+    incoming residual, parked rows return unchanged); kv_out = (k, v) each
+    (B, T, Hkv, hd) — or (latent,) (B, T, lat) for MLA — valid where
+    token_mask is set.
+    """
+    x, _, kv_out, _ = layer_forward(p, cfg, h, positions, kind="attn",
+                                    enc_kv=enc_kv, k_ctx=k_ctx, v_ctx=v_ctx,
+                                    q_offset=q_offset, return_kv=True,
+                                    moe_drop_free=True)
+    # masked lanes PRESERVE the incoming residual: right padding stays at
+    # its admitted zeros, real tokens of LATER chunks inside the bucketed
+    # window keep their layer-input values for their own chunk's launch,
+    # and parked rows (step_mask False => token_mask all-False) come back
+    # byte-for-byte unchanged
+    x = jnp.where(token_mask[..., None] & step_mask[:, None, None], x, h)
+    return x, kv_out
+
+
+def prefill_recurrent_layer_batched(p: Dict, cfg: ModelConfig, kind: str,
+                                    h: jax.Array, token_mask: jax.Array,
+                                    step_mask: jax.Array, rec_state):
+    """One mamba/rwkv layer over a padded batch of same-layer segments.
+    Returns (h_out, new_rec_state), both masked: parked rows' hidden AND
+    recurrent state come back unchanged."""
+    if kind == "rwkv":
+        x = h
+        out, st = rwkv_mod.rwkv_time_mix(p["rwkv"], cfg,
+                                         _norm(cfg, p["ln1"], x), rec_state,
+                                         token_mask=token_mask)
+        x = x + out
+        out, st = rwkv_mod.rwkv_channel_mix(p["rwkv"],
+                                            _norm(cfg, p["ln2"], x), st,
+                                            token_mask=token_mask)
+        x = x + out
+    else:
+        h_in = _norm(cfg, p["attn_norm"], h)
+        out, st = mamba_mod.mamba_forward(p["mamba"], cfg, h_in, rec_state,
+                                          return_state=True,
+                                          token_mask=token_mask)
+        x = h + out
+        h_in = _norm(cfg, p["ffn_norm"], x)
+        if "moe" in p:
+            f, _ = ffn_mod.moe_apply(p["moe"], cfg, h_in, drop_free=True)
+        else:
+            f = ffn_mod.ffn_apply(p["ffn"], h_in)
+        x = x + f
+    # same lane-preserving mask as the attention stage (see above)
+    x = jnp.where(token_mask[..., None] & step_mask[:, None, None], x, h)
+    st = _mask_state(st, rec_state, step_mask)
+    return x, st
+
+
+def prefill_logits_batched(params: Dict, cfg: ModelConfig, h: jax.Array,
+                           tok_len: jax.Array) -> jax.Array:
+    """Finalize stage of the prefill plane: gather each row's LAST REAL
+    hidden state (h: (B, S_cap, d), tok_len: (B,)) and run the lm head.
+    Returns (B, V); only finishing rows' logits are meaningful."""
+    idx = jnp.maximum(tok_len - 1, 0)
+    h_last = jnp.take_along_axis(h, idx[:, None, None], axis=1)
+    return lm_head(params, cfg, h_last)[:, 0]
 
 
 # ---------------------------------------------------------------------------

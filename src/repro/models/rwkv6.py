@@ -99,9 +99,24 @@ def _wkv_step(S, r, k, v, w, u, H, hd):
     return S_new, y
 
 
+def _last_valid(x: jax.Array, token_mask: jax.Array) -> jax.Array:
+    """Per-row gather of x at the last valid position.  x: (B, S, d);
+    token_mask: (B, S) bool (right-padded).  Returns (B, d)."""
+    n_valid = jnp.sum(token_mask.astype(jnp.int32), axis=1)
+    idx = jnp.maximum(n_valid - 1, 0)
+    return jnp.take_along_axis(x, idx[:, None, None], axis=1)[:, 0]
+
+
 def rwkv_time_mix(p: Dict, cfg: ModelConfig, x: jax.Array, state: Dict,
-                  ) -> Tuple[jax.Array, Dict]:
-    """Full-sequence time-mix.  x: (B, S, d)."""
+                  token_mask: jax.Array = None) -> Tuple[jax.Array, Dict]:
+    """Full-sequence time-mix.  x: (B, S, d).
+
+    token_mask: optional (B, S) bool for right-padded batched prefill —
+    masked positions write nothing into the wkv state (their k is zeroed
+    and their decay forced to 1, so ``S`` passes through unchanged) and the
+    token-shift state is gathered from the last VALID position per row, so
+    the returned state equals an unpadded run's.  Masked positions' outputs
+    are garbage; callers mask them out."""
     H, hd = _dims(cfg)
     B, S, d = x.shape
     xx = jnp.concatenate([state["shift_t"][:, None, :], x[:, :-1, :]], axis=1)
@@ -110,6 +125,10 @@ def rwkv_time_mix(p: Dict, cfg: ModelConfig, x: jax.Array, state: Dict,
     kh = k.reshape(B, S, H, hd).astype(jnp.float32)
     vh = v.reshape(B, S, H, hd).astype(jnp.float32)
     wh = w.reshape(B, S, H, hd)
+    if token_mask is not None:
+        tm = token_mask[:, :, None, None]
+        kh = kh * tm.astype(kh.dtype)
+        wh = jnp.where(tm, wh, 1.0)
 
     def step(Scur, inp):
         r_t, k_t, v_t, w_t = inp
@@ -122,19 +141,21 @@ def rwkv_time_mix(p: Dict, cfg: ModelConfig, x: jax.Array, state: Dict,
     y = jax.vmap(lambda yt: _group_norm(yt, H, p["ln_x_w"], p["ln_x_b"]),
                  in_axes=1, out_axes=1)(y)
     out = (y * g) @ p["w_o"]
-    new_state = dict(state, shift_t=x[:, -1, :], S=S_fin)
+    shift = (x[:, -1, :] if token_mask is None else _last_valid(x, token_mask))
+    new_state = dict(state, shift_t=shift, S=S_fin)
     return out, new_state
 
 
 def rwkv_channel_mix(p: Dict, x: jax.Array, state: Dict,
-                     ) -> Tuple[jax.Array, Dict]:
+                     token_mask: jax.Array = None) -> Tuple[jax.Array, Dict]:
     xx = jnp.concatenate([state["shift_c"][:, None, :], x[:, :-1, :]], axis=1)
     xr = x + (xx - x) * p["cmu_r"]
     xk = x + (xx - x) * p["cmu_k"]
     r = jax.nn.sigmoid(xr @ p["cw_r"])
     k = jnp.square(jax.nn.relu(xk @ p["cw_k"]))
     out = r * (k @ p["cw_v"])
-    return out, dict(state, shift_c=x[:, -1, :])
+    shift = (x[:, -1, :] if token_mask is None else _last_valid(x, token_mask))
+    return out, dict(state, shift_c=shift)
 
 
 def rwkv_time_mix_step(p: Dict, cfg: ModelConfig, x: jax.Array, state: Dict

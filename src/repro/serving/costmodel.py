@@ -133,6 +133,24 @@ def prefill_time(hw: HardwareSpec, mc: ModelCost, new_tokens: int,
     return flops / (hw.peak_flops * hw.mfu)
 
 
+def batched_prefill_time(hw: HardwareSpec, mc: ModelCost,
+                         segs, layers: int = 1) -> float:
+    """ONE batched prefill-plane launch (layer-segmented prefill §3.4).
+
+    segs: [(new_tokens, context)] — one entry per request row in the
+    launch.  The plane batches every same-layer segment of the prefill
+    batch into a single jitted launch, so the kernel launch overhead is
+    paid ONCE per (layer, chunk) group instead of once per request segment;
+    compute is charged on each row's REAL tokens (padding is bucketed and
+    masked, not charged).  The legacy per-request executor is charged with
+    the same formula at batch 1, so the modeled plane-vs-legacy difference
+    is exactly the launch amortization."""
+    t = hw.kernel_launch_overhead
+    for new_tokens, context in segs:
+        t += prefill_time(hw, mc, new_tokens, context, layers=layers)
+    return t
+
+
 def overlapped_decode_time(hw: HardwareSpec, mc: ModelCost, batch: int,
                            attended_tokens_per_req: float,
                            transfer_bytes_by_layer) -> float:

@@ -26,9 +26,22 @@ with
     slots; newly generated KV writes back to DRAM with one fused FlashD2H
     save per layer per iteration),
   * working-set-aware batch size control (Algorithm 1, §3.3),
-  * layer-segmented OR chunked prefill (§3.4 vs the baseline).
+  * layer-segmented OR chunked prefill (§3.4 vs the baseline).  Layer-
+    segmented prefill runs on a batched jitted **PrefillPlane** by default
+    (``repro.core.prefill_plane``): requests are admitted once into padded
+    plane rows carrying their residual stream, every iteration batches all
+    same-(layer, chunk) segments of the prefill batch into ONE jitted
+    bucketed launch (token-length + batch buckets, ``step_mask`` parks
+    unscheduled rows), each group's KV is saved to DRAM with ONE fused
+    FlashD2H call, and the prefill HBM footprint stays bounded by one
+    layer of KV for the WHOLE batch.  Chunked intra-layer segments
+    (``prefill_max_tokens_per_step``) are executed natively.  The
+    per-request whole-layer loop survives as ``prefill_exec="legacy"``,
+    the equivalence oracle.  Hybrid iterations interleave plane prefill
+    launches with the staged decode plane under the shared HBM budget.
 
-See docs/architecture.md for the decode data plane end-to-end.
+See docs/architecture.md for the decode data plane and the prefill plane
+end-to-end.
 
 The CONTROL PLANE is fully real (scheduling, admission, caching, transfer
 accounting, prefill segmentation); the MODEL COMPUTE is fully real (actual
@@ -54,7 +67,9 @@ import numpy as np
 from repro.core import dsa as dsa_mod
 from repro.core.device_pool import BucketingPolicy, DevicePoolPlane
 from repro.core.kv_cache import KVCacheManager, KVGeometry, TransferStats
-from repro.core.layer_prefill import LayerPrefillState, plan_segments
+from repro.core.layer_prefill import (LayerPrefillState, hbm_footprint_tokens,
+                                      plan_segments)
+from repro.core.prefill_plane import PrefillPlane
 from repro.core.scheduler import BatchPlan, Scheduler, SchedulerConfig
 from repro.models import model as M
 from repro.models.common import ModelConfig
@@ -66,6 +81,23 @@ from repro.serving.request import Phase, Request
 @dataclasses.dataclass
 class EngineConfig:
     prefill_mode: str = "layer_segmented"    # "chunked" | "layer_segmented"
+    prefill_exec: str = "plane"              # layer-segmented executor:
+                                             # "plane" (default): batched
+                                             # jitted PrefillPlane — one
+                                             # bucketed launch per (layer,
+                                             # chunk) group per iteration,
+                                             # one fused FlashD2H save per
+                                             # group; "legacy": the
+                                             # per-request whole-layer loop
+                                             # (equivalence oracle).
+    prefill_max_tokens_per_step: int = 0     # intra-layer chunk size for the
+                                             # prefill plane's segments
+                                             # (plan_segments granularity;
+                                             # 0 = whole layers, the TBT-SLO
+                                             # hybrid of §3.4 off).  MLA
+                                             # models always run whole
+                                             # layers (no latent-context
+                                             # attention path).
     chunk_size: int = 2048
     max_inject_tokens: int = 0               # 0 -> chunk_size * L (paper §4.2)
     r_max: int = 8
@@ -120,6 +152,10 @@ class _ReqState:
     decode_state: Optional[Dict] = None             # model DecodeState (B=1;
                                                     # stacked per iteration)
     lp: Optional[LayerPrefillState] = None          # layer-segmented cursor
+                                                    # (legacy executor)
+    prefill_carry: int = 0                          # plane executor: unspent
+                                                    # token-layer budget
+                                                    # carried across iters
     chunk_ctx: Optional[List] = None                # chunked: per-layer kv ctx
     chunk_rec: Optional[List] = None                # chunked: recurrent states
     last_logits: Optional[jax.Array] = None
@@ -142,6 +178,9 @@ class ServingEngine:
         if eng.decode_plane not in ("staged", "persistent", "stacked"):
             raise ValueError(f"unknown decode_plane {eng.decode_plane!r}; "
                              f"expected 'staged', 'persistent' or 'stacked'")
+        if eng.prefill_exec not in ("plane", "legacy"):
+            raise ValueError(f"unknown prefill_exec {eng.prefill_exec!r}; "
+                             f"expected 'plane' or 'legacy'")
         if eng.prefill_mode == "chunked" and cfg.attention_type == "mla":
             # the chunked baseline carries dense (k, v) context between
             # chunks; MLA's latent cache has no chunked-context path yet
@@ -181,12 +220,17 @@ class ServingEngine:
             kv_factor=1 if cfg.attention_type == "mla" else 2)
         inject = (eng.max_inject_tokens if eng.max_inject_tokens > 0
                   else eng.chunk_size * cfg.num_layers)
+        seg_tokens = (eng.prefill_max_tokens_per_step
+                      if (eng.prefill_mode == "layer_segmented"
+                          and eng.prefill_exec == "plane"
+                          and cfg.attention_type != "mla") else 0)
         self.scheduler = Scheduler(
             SchedulerConfig(
                 r_max=eng.r_max, t_max=eng.t_max,
                 m_avl_bytes=eng.hbm_budget_bytes if eng.ws_control else 0,
                 prefill_mode=eng.prefill_mode, chunk_size=eng.chunk_size,
-                max_inject_tokens=inject, ws_control=eng.ws_control),
+                max_inject_tokens=inject, segment_tokens=seg_tokens,
+                ws_control=eng.ws_control),
             self.geom, cfg.num_layers, cfg.dsa.top_k_blocks)
         self.kv_mgr = KVCacheManager(self.geom, eng.hbm_budget_bytes)
         self.states: Dict[str, _ReqState] = {}
@@ -202,6 +246,9 @@ class ServingEngine:
                                                  # persistent plane)
         self.planes: Dict[Tuple, DevicePoolPlane] = {}   # group_key -> plane
         self._req_plane: Dict[str, DevicePoolPlane] = {}
+        self.prefill_planes: Dict[Tuple, PrefillPlane] = {}
+        self._req_prefill_plane: Dict[str, PrefillPlane] = {}
+        self.prefill_launches = 0                # batched plane launches
         self._staged_layer_bytes: Dict[int, int] = {}    # model layer ->
                                                          # H2D restore bytes
                                                          # this iteration
@@ -303,7 +350,8 @@ class ServingEngine:
         enc_kv = M.index_enc_kvs(st.lp.enc_kvs, l)
         h, kv_out, new_rec = M.prefill_layer(
             self.params, cfg, l, st.lp.hidden, st.lp.positions,
-            rec_state=st.lp.rec_states[l], enc_kv=enc_kv)
+            rec_state=st.lp.rec_states[l], enc_kv=enc_kv,
+            moe_drop_free=True)
         st.lp.hidden = h
         st.lp.rec_states[l] = new_rec
 
@@ -331,8 +379,6 @@ class ServingEngine:
         else:
             st.decode_state["caches"][l] = new_rec
 
-        self.prefill_hbm_peak_tokens = max(
-            self.prefill_hbm_peak_tokens, st.req.prompt_len)
         if seg.is_last:
             logits = M.prefill_finalize(self.params, cfg, st.lp.hidden)
             st.last_logits = logits
@@ -397,7 +443,10 @@ class ServingEngine:
                 h = h + out
                 h_in = M._norm(cfg, p["ffn_norm"], h)
                 if "moe" in p:
-                    f, _ = ffn_mod.moe_apply(p["moe"], cfg, h_in)
+                    # drop-free like every serving prefill path: capacity
+                    # must not couple chunk size to routing drops
+                    f, _ = ffn_mod.moe_apply(p["moe"], cfg, h_in,
+                                             drop_free=True)
                 else:
                     f = ffn_mod.ffn_apply(p["ffn"], h_in)
                 h = h + f
@@ -405,11 +454,10 @@ class ServingEngine:
                 # recurrent / MLA layers fall back to full-layer forward
                 h, _, _, new_rec = M.layer_forward(
                     p, cfg, h, positions, kind=kind,
-                    rec_state=st.chunk_rec[l], return_kv=False)
+                    rec_state=st.chunk_rec[l], return_kv=False,
+                    moe_drop_free=True)
                 st.chunk_rec[l] = new_rec
         r.prefill_tokens_done = end
-        self.prefill_hbm_peak_tokens = max(self.prefill_hbm_peak_tokens,
-                                           end * cfg.num_layers)
         if end >= r.prompt_len:
             st.last_logits = M.lm_head(self.params, cfg, h[:, -1:, :])[:, 0]
             # build the decode state from accumulated ctx
@@ -443,6 +491,159 @@ class ServingEngine:
             st.chunk_ctx = None
             return True
         return False
+
+    # ------------------------------------------------------------------
+    # Prefill plane (batched jitted layer-segmented prefill, the default)
+    # ------------------------------------------------------------------
+    def _prefill_group_key(self, enc_list) -> Tuple:
+        """Requests share a PrefillPlane when their whisper encoder KV
+        shapes agree (mirrors the decode plane's grouping)."""
+        if not enc_list:
+            return ()
+        return tuple((tuple(a.shape[1:]), str(a.dtype))
+                     for kv in enc_list for a in kv)
+
+    def _admit_prefill_plane(self, st: _ReqState) -> PrefillPlane:
+        """Embed the prompt once, plan its (layer, chunk) segments, and
+        admit the request into its group's PrefillPlane row."""
+        cfg = self.cfg
+        h, _, enc_kvs = M.prefill_embed(self.params, cfg,
+                                        self._model_inputs(st))
+        S = int(h.shape[1])                     # prompt (+ patches)
+        step = S
+        if (self.eng.prefill_max_tokens_per_step > 0
+                and cfg.attention_type != "mla"):
+            # MLA keeps whole-layer segments: the latent cache has no
+            # chunked-context attention path (same restriction as the
+            # chunked baseline)
+            step = self.eng.prefill_max_tokens_per_step
+        segs = plan_segments(S, cfg.num_layers, step)
+        enc_list = ([M.index_enc_kvs(enc_kvs, i)
+                     for i in range(cfg.num_layers)]
+                    if enc_kvs is not None else None)
+        key = self._prefill_group_key(enc_list)
+        plane = self.prefill_planes.get(key)
+        if plane is None:
+            plane = self.prefill_planes[key] = PrefillPlane(
+                cfg, self.eng.bucketing)
+        plane.admit(st.req.req_id, h, segs, enc_list)
+        self._req_prefill_plane[st.req.req_id] = plane
+        st.decode_state = {"caches": [None] * cfg.num_layers,
+                           "cur_len": None,
+                           "extra": ({"enc_kvs": enc_list} if enc_list
+                                     else {})}
+        return plane
+
+    def _prefill_plane_iteration(self, prefill_reqs
+                                 ) -> Tuple[float, List[Request], int]:
+        """Run one iteration of batched plane prefill for the scheduled
+        requests.  Per executed (layer, chunk) group: ONE jitted bucketed
+        launch over the whole batch, ONE fused FlashD2H save of the group's
+        KV stripes (``save_new_tokens_fused``), and — at each row's last
+        chunk of the layer — the decode pool build plus HBM eviction of the
+        layer (the one-layer bound).  Rows whose final segment ran share
+        one finalize (logits) launch.
+
+        Returns (modeled time, finished requests, iteration HBM footprint
+        in token-layer units summed over every admitted prefill row)."""
+        L = self.cfg.num_layers
+        t = 0.0
+        done: List[Request] = []
+        fp = 0
+        by_plane: Dict[int, Tuple[PrefillPlane, Dict[str, int]]] = {}
+        for req, inject in prefill_reqs:
+            st = self.states[req.req_id]
+            if req.scheduled_time is None:
+                req.scheduled_time = self.now
+            plane = self._req_prefill_plane.get(req.req_id)
+            if plane is None:
+                plane = self._admit_prefill_plane(st)
+            st.prefill_carry += max(int(inject), 1)
+            _, allow = by_plane.setdefault(id(plane), (plane, {}))
+            allow[req.req_id] = st.prefill_carry
+        for plane, allow in by_plane.values():
+            spent: Dict[str, int] = {}
+            t_acc = [0.0]
+
+            def group_cb(g, plane=plane, spent=spent, t_acc=t_acc):
+                # runs in the window right after the group's launch, while
+                # the plane's ONE-layer context still holds this layer
+                t_acc[0] += cm.batched_prefill_time(
+                    self.hw, self.mc,
+                    [(g.segs[rid].chunk_len,
+                      g.chunk_start + g.segs[rid].chunk_len)
+                     for rid in g.req_ids], layers=1)
+                self.prefill_launches += 1
+                for rid in g.req_ids:
+                    spent[rid] = spent.get(rid, 0) + g.segs[rid].chunk_len
+                if g.kind != "attn":
+                    return
+                lidx = self._attn_layer_index(g.layer)
+                # FlashD2H: ONE fused save of the whole group's stripes
+                kv_by_req = plane.read_group_kv(g)
+                self.kv_mgr.save_new_tokens_fused(lidx, {
+                    rid: (g.chunk_start, k, v)
+                    for rid, (k, v) in kv_by_req.items()})
+                for rid in g.req_ids:
+                    pool = self.kv_mgr.pools.get(rid)
+                    if pool is not None:
+                        pool.flush()
+                # end of layer: build the decode pool from the plane's
+                # one-layer context, then evict the layer from HBM
+                for rid in g.req_ids:
+                    if not g.segs[rid].is_last_chunk_of_layer:
+                        continue
+                    st_r = self.states[rid]
+                    pool_kv, _ = self._kv_to_layer_cache(
+                        st_r, plane.layer_ctx(rid))
+                    st_r.decode_state["caches"][g.layer] = pool_kv
+                    cache = self.kv_mgr.caches.get(rid)
+                    if cache is not None:
+                        cache.drop_layer(lidx)
+
+            res = plane.run_iteration(self.params, allow, group_cb)
+            t += t_acc[0]
+            for rid in allow:
+                st_r = self.states[rid]
+                st_r.prefill_carry = max(
+                    0, st_r.prefill_carry - spent.get(rid, 0))
+                # mirror the plane cursor into the scheduler's pacing state
+                req = st_r.req
+                if not plane.done(rid):
+                    seg = plane.segments[rid][plane.next_idx[rid]]
+                    req.prefill_layer = seg.layer
+                    req.prefill_layer_tokens_done = min(
+                        seg.chunk_start, max(req.prompt_len - 1, 0))
+            for rid, peak in res.peaks.items():
+                fp += hbm_footprint_tokens(
+                    plane.tok_len[rid], "layer_segmented", L,
+                    layer_tokens_resident=peak)
+            for rid in res.finished:
+                st_r = self.states[rid]
+                row = plane.rows[rid]
+                st_r.last_logits = res.logits[row:row + 1]
+                caches = st_r.decode_state["caches"]
+                for l in range(L):
+                    if caches[l] is None and M.layer_kind(self.cfg,
+                                                          l) != "attn":
+                        caches[l] = plane.rec_state(rid, l)
+                st_r.decode_state["cur_len"] = jnp.full(
+                    (1,), plane.tok_len[rid], jnp.int32)
+                st_r.req.prefill_layer = L
+                st_r.req.prefill_layer_tokens_done = 0
+                plane.release(rid)
+                self._req_prefill_plane.pop(rid, None)
+                done.append(st_r.req)
+        # planes with NO scheduled request this iteration still hold their
+        # rows' mid-layer chunk residency — count it into the watermark
+        for plane in self.prefill_planes.values():
+            if id(plane) in by_plane:
+                continue
+            for rid, resident in plane.resident_tokens().items():
+                fp += hbm_footprint_tokens(
+                    plane.tok_len[rid], "layer_segmented", L,
+                    layer_tokens_resident=resident)
+        return t, done, fp
 
     # ------------------------------------------------------------------
     # Decode execution
@@ -782,41 +983,77 @@ class ServingEngine:
 
         # --- prefill segments ------------------------------------------
         t_prefill = 0.0
-        for req, inject in plan.prefill_reqs:
+        prefill_done: List[Request] = []
+        iter_prefill_fp = 0          # HBM watermark, token-layer units,
+                                     # summed over the iteration's batch
+        scheduled_prefill = {req.req_id for req, _ in plan.prefill_reqs}
+        if (self.eng.prefill_mode == "layer_segmented"
+                and self.eng.prefill_exec == "plane"):
+            # with no scheduled prefill this still books the watermark of
+            # rows parked mid-layer in the planes
+            t_prefill, prefill_done, iter_prefill_fp = \
+                self._prefill_plane_iteration(plan.prefill_reqs)
+        else:
+            for req, inject in plan.prefill_reqs:
+                st = self.states[req.req_id]
+                if req.scheduled_time is None:
+                    req.scheduled_time = self.now
+                if self.eng.prefill_mode == "layer_segmented":
+                    if st.lp is None:
+                        # whole-layer segments; inject (token-layers)
+                        # decides how many run per iteration
+                        self._start_layer_segmented(st, req.prompt_len)
+                    # advance the scheduler cursor by `inject` token-layers
+                    # (cursor = source of truth; >=1 whole layer/iteration)
+                    req.prefill_layer_tokens_done += max(inject,
+                                                         req.prompt_len)
+                    while (req.prefill_layer_tokens_done >= req.prompt_len
+                           and req.prefill_layer < self.cfg.num_layers):
+                        req.prefill_layer += 1
+                        req.prefill_layer_tokens_done -= req.prompt_len
+                    # run segments to catch the cursor up
+                    done = False
+                    ran = False
+                    while (st.lp is not None and not done
+                           and st.lp.next_idx < req.prefill_layer):
+                        done = self._run_layer_segment(st)
+                        ran = True
+                        t_prefill += cm.batched_prefill_time(
+                            self.hw, self.mc,
+                            [(req.prompt_len, req.prompt_len)], layers=1)
+                    if ran:
+                        # the whole layer's KV is live while segments run
+                        iter_prefill_fp += hbm_footprint_tokens(
+                            req.prompt_len, "layer_segmented",
+                            self.cfg.num_layers)
+                else:
+                    done = self._run_chunked_prefill(st, inject)
+                    ctx = req.prefill_tokens_done
+                    t_prefill += cm.prefill_time(self.hw, self.mc, inject,
+                                                 ctx)
+                    iter_prefill_fp += hbm_footprint_tokens(
+                        req.prompt_len, "chunked", self.cfg.num_layers,
+                        req.prefill_tokens_done)
+                if done:
+                    prefill_done.append(req)
+        # chunked prefill keeps every processed token's KV (all layers)
+        # resident BETWEEN iterations too — count unscheduled holders
+        for st in self.states.values():
+            if (st.chunk_ctx is not None
+                    and st.req.req_id not in scheduled_prefill):
+                iter_prefill_fp += hbm_footprint_tokens(
+                    st.req.prompt_len, "chunked", self.cfg.num_layers,
+                    st.req.prefill_tokens_done)
+        self.prefill_hbm_peak_tokens = max(self.prefill_hbm_peak_tokens,
+                                           iter_prefill_fp)
+        for req in prefill_done:
             st = self.states[req.req_id]
-            if req.scheduled_time is None:
-                req.scheduled_time = self.now
-            if self.eng.prefill_mode == "layer_segmented":
-                if st.lp is None:
-                    # whole-layer segments; inject (token-layers) decides
-                    # how many run per iteration
-                    self._start_layer_segmented(st, req.prompt_len)
-                # advance the scheduler cursor by `inject` token-layers
-                # (cursor = source of truth; >=1 whole layer per iteration)
-                req.prefill_layer_tokens_done += max(inject, req.prompt_len)
-                while (req.prefill_layer_tokens_done >= req.prompt_len
-                       and req.prefill_layer < self.cfg.num_layers):
-                    req.prefill_layer += 1
-                    req.prefill_layer_tokens_done -= req.prompt_len
-                # run segments to catch the cursor up
-                done = False
-                while (st.lp is not None and not done
-                       and st.lp.next_idx < req.prefill_layer):
-                    done = self._run_layer_segment(st)
-                    t_prefill += cm.prefill_time(
-                        self.hw, self.mc, req.prompt_len, req.prompt_len,
-                        layers=1)
-            else:
-                done = self._run_chunked_prefill(st, inject)
-                ctx = req.prefill_tokens_done
-                t_prefill += cm.prefill_time(self.hw, self.mc, inject, ctx)
-            if done:
-                req.phase = Phase.DECODE
-                req.prefill_tokens_done = req.prompt_len
-                st.out_tokens.append(self._sample(st))   # the first token
-                req.generated = 1
-                req.first_token_time = self.now   # charged below
-                req.token_times.append(self.now)
+            req.phase = Phase.DECODE
+            req.prefill_tokens_done = req.prompt_len
+            st.out_tokens.append(self._sample(st))       # the first token
+            req.generated = 1
+            req.first_token_time = self.now   # charged below
+            req.token_times.append(self.now)
 
         # --- decode steps ----------------------------------------------
         if self.eng.batched_decode:

@@ -65,3 +65,16 @@ def test_hbm_footprint_bound(prompt, layers, done):
     assert chunked == done * layers          # grows with progress
     if done == prompt and layers > 1:
         assert seg < chunked                 # the paper's Fig. 16a claim
+
+
+@given(prompt=st.integers(1, 4000), layers=st.integers(1, 64),
+       resident=st.integers(0, 8000))
+@settings(**SET)
+def test_hbm_footprint_measured_residency(prompt, layers, resident):
+    """The watermark form: a measured per-row residency (the prefill
+    plane's within-iteration peak of the CURRENT layer) is reported
+    directly, still capped by the one-layer bound."""
+    seg = hbm_footprint_tokens(prompt, "layer_segmented", layers,
+                               layer_tokens_resident=resident)
+    assert seg == min(resident, prompt)
+    assert seg <= hbm_footprint_tokens(prompt, "layer_segmented", layers)
