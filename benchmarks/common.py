@@ -1,27 +1,60 @@
-"""Shared benchmark helpers: CSV emission, timing.
+"""Shared benchmark helpers: CSV emission, timing, JSON capture.
 
 Output convention (consumed by benchmarks/README.md schemas and any
 plotting scripts): one ``name,key=value,...`` line per data point on
 stdout, where ``name`` identifies the series within the figure.  Section
 headers are ``### title`` lines; everything else is free-form progress
 text.  Stdout is flushed per line so long sweeps stream.
+
+Machine-readable capture (``benchmarks/run.py --json PATH``): while a
+capture is active, every ``emit`` call is ALSO recorded as a dict
+(``{"series", "section", **fields}``) so the harness can dump the exact
+same data points as JSON — the CSV lines on stdout stay byte-identical.
 """
 from __future__ import annotations
 
 import sys
 import time
-from typing import Any, Iterable
+from typing import Any, Dict, Iterable, List, Optional
+
+_capture: Optional[List[Dict[str, Any]]] = None
+_section: Optional[str] = None
+
+
+def _jsonable(v: Any) -> Any:
+    return v if isinstance(v, (int, float, str, bool)) or v is None else str(v)
+
+
+def begin_capture() -> None:
+    """Start recording emitted data points (run.py --json)."""
+    global _capture, _section
+    _capture = []
+    _section = None
+
+
+def end_capture() -> List[Dict[str, Any]]:
+    """Stop recording; returns the rows captured since begin_capture."""
+    global _capture, _section
+    rows, _capture, _section = _capture or [], None, None
+    return rows
 
 
 def emit(name: str, **fields: Any) -> None:
     """Print one CSV data point: ``name,key=value,...``."""
     kv = ",".join(f"{k}={v}" for k, v in fields.items())
     print(f"{name},{kv}", flush=True)
+    if _capture is not None:
+        row: Dict[str, Any] = {"series": name, "section": _section}
+        row.update({k: _jsonable(v) for k, v in fields.items()})
+        _capture.append(row)
 
 
 def header(title: str) -> None:
     """Print a ``### title`` section header."""
+    global _section
     print(f"\n### {title}", flush=True)
+    if _capture is not None:
+        _section = title
 
 
 class Timer:

@@ -18,10 +18,16 @@ artifact it reproduces).  Flags:
 
     --only   comma-separated subset of the names below (default: all)
     --list   print the available names and their modules, then exit
+    --json   ALSO write every emitted data point to PATH as JSON
+             ({"schema": 1, "benchmarks": {name: {"status", "seconds",
+             "rows": [{"series", "section", ...fields}]}}}) — the
+             machine-readable artifact nightly CI uploads so the perf
+             trajectory accumulates (benchmarks/README.md §JSON schema)
 """
 from __future__ import annotations
 
 import argparse
+import json
 import os as _os
 import sys
 import time
@@ -51,6 +57,9 @@ def main() -> None:
                     help=f"comma list of {list(MODULES)} (default: all)")
     ap.add_argument("--list", action="store_true",
                     help="list available benchmarks and exit")
+    ap.add_argument("--json", default="", metavar="PATH",
+                    help="also write the emitted data points to PATH as "
+                         "JSON (schema: benchmarks/README.md)")
     args = ap.parse_args()
     if args.list:
         for name, mod in MODULES.items():
@@ -63,17 +72,35 @@ def main() -> None:
         ap.error(f"unknown benchmark(s) {unknown}; choose from "
                  f"{list(MODULES)}")
     import importlib
+
+    from benchmarks import common
     t0 = time.perf_counter()
     failures = []
+    results = {}
     for name in names:
         t = time.perf_counter()
+        common.begin_capture()
+        err = ""
         try:
             mod = importlib.import_module(MODULES[name])
             mod.main()
         except Exception as e:  # noqa: BLE001
             failures.append(name)
-            print(f"BENCH FAIL {name}: {type(e).__name__}: {e}", flush=True)
-        print(f"[{name} done in {time.perf_counter()-t:.1f}s]", flush=True)
+            err = f"{type(e).__name__}: {e}"
+            print(f"BENCH FAIL {name}: {err}", flush=True)
+        dt = time.perf_counter() - t
+        results[name] = {"status": "fail" if err else "ok",
+                         "seconds": round(dt, 2),
+                         "rows": common.end_capture()}
+        if err:
+            results[name]["error"] = err
+        print(f"[{name} done in {dt:.1f}s]", flush=True)
+    if args.json:
+        out_dir = _os.path.dirname(_os.path.abspath(args.json))
+        _os.makedirs(out_dir, exist_ok=True)
+        with open(args.json, "w") as f:
+            json.dump({"schema": 1, "benchmarks": results}, f, indent=1)
+        print(f"wrote {args.json}", flush=True)
     print(f"\nall benchmarks done in {time.perf_counter()-t0:.1f}s; "
           f"{len(failures)} failed {failures or ''}")
     if failures:

@@ -208,10 +208,11 @@ class _StagedDecodeFns(StageFns):
     buffers are donated so XLA updates them in place on accelerators).
     """
 
-    def __init__(self, cfg, attn_impl: str):
+    def __init__(self, cfg, attn_impl: str, plane_mesh=None):
         super().__init__()
         self.cfg = cfg
         self.attn_impl = attn_impl
+        self.plane_mesh = plane_mesh
         wrap = self.wrap
 
         self.embed = wrap("embed",
@@ -219,18 +220,22 @@ class _StagedDecodeFns(StageFns):
                           M.decode_embed(params, cfg, tokens))
         # select consumes and returns the layer's pool cache (arg 2): donate
         # so the append/meta update reuses the buffer instead of copying the
-        # full pool per layer per iteration
+        # full pool per layer per iteration.  With a plane_mesh the pool-
+        # touching core of both stages runs under shard_map (KV-head- or
+        # block-sharded slots; see launch/plane_mesh.py).
         self.select = wrap("select",
                            lambda p, x, cache, cur_len, mask:
                            M.decode_select_layer(p, cfg, x, cache, cur_len,
-                                                 step_mask=mask),
+                                                 step_mask=mask,
+                                                 plane_mesh=plane_mesh),
                            donate=(2,))
         self.attend = wrap("attend",
                            lambda p, x, q, cache, cur_len, idx, valid, enc:
                            M.decode_attend_layer(p, cfg, x, q, cache,
                                                  cur_len, idx, valid,
                                                  enc_kv=enc,
-                                                 attn_impl=attn_impl))
+                                                 attn_impl=attn_impl,
+                                                 plane_mesh=plane_mesh))
         self._recurrent = {
             kind: wrap("recurrent-" + kind,
                        lambda p, x, cache, mask, kind=kind:
@@ -244,13 +249,14 @@ class _StagedDecodeFns(StageFns):
                                            step_mask=mask))
 
 
-_STAGED_FNS: Dict[Tuple[str, str], _StagedDecodeFns] = {}
+_STAGED_FNS: Dict[Tuple, _StagedDecodeFns] = {}
 
 
-def staged_fns_for(cfg, attn_impl: str) -> _StagedDecodeFns:
-    key = (repr(cfg), attn_impl)
+def staged_fns_for(cfg, attn_impl: str, plane_mesh=None) -> _StagedDecodeFns:
+    key = (repr(cfg), attn_impl,
+           None if plane_mesh is None else plane_mesh.key())
     if key not in _STAGED_FNS:
-        _STAGED_FNS[key] = _StagedDecodeFns(cfg, attn_impl)
+        _STAGED_FNS[key] = _StagedDecodeFns(cfg, attn_impl, plane_mesh)
     return _STAGED_FNS[key]
 
 
@@ -296,12 +302,17 @@ class DevicePoolPlane:
     """
 
     def __init__(self, cfg, policy: Optional[BucketingPolicy] = None,
-                 attn_impl: str = "ref"):
+                 attn_impl: str = "ref", plane_mesh=None):
+        if plane_mesh is not None and not cfg.dsa.enabled:
+            raise NotImplementedError(
+                "sharded decode plane requires DSA (cfg.dsa.enabled): the "
+                "context-parallel attend has no dense fallback")
         self.cfg = cfg
         self.policy = policy or BucketingPolicy()
         self.attn_impl = attn_impl
+        self.plane_mesh = plane_mesh
         self.decode_fn = decode_fn_for(cfg, attn_impl)
-        self.staged_fns = staged_fns_for(cfg, attn_impl)
+        self.staged_fns = staged_fns_for(cfg, attn_impl, plane_mesh)
         self.state: Optional[Dict] = None
         self.b_cap = 0
         self.nb_cap = 0
@@ -381,6 +392,9 @@ class DevicePoolPlane:
                          need_nb: int) -> None:
         b_cap = max(self.b_cap, self.policy.bucket_batch(need_rows))
         nb_cap = max(self.nb_cap, self.policy.bucket_blocks(need_nb))
+        if self.plane_mesh is not None:
+            # block-sharded pools must divide the model axis evenly
+            nb_cap = self.plane_mesh.round_blocks(self.cfg, nb_cap)
         if self.state is None:
             self.state = self._alloc(template, b_cap, nb_cap)
             self._free = list(range(b_cap))

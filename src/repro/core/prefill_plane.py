@@ -60,11 +60,16 @@ class _PrefillFns(StageFns):
     assert (bounded by stage kinds x shape buckets x chunk offsets, never
     the iteration count)."""
 
-    def __init__(self, cfg):
+    def __init__(self, cfg, plane_mesh=None):
         super().__init__()
         self.cfg = cfg
+        self.plane_mesh = plane_mesh
         wrap = self.wrap
 
+        # with a plane_mesh, attention launches run SEQUENCE-SHARDED over
+        # the mesh's model axis (model._prefill_attn_layer_batched_cp):
+        # only the window's fresh K/V is all-gathered.  Recurrent layers
+        # (sequential scans) and MLA layers stay replicated.
         self.attn = wrap(
             "attn",
             lambda p, h, pos, tmask, smask, ctx, enc, qoff:
@@ -72,7 +77,7 @@ class _PrefillFns(StageFns):
                 p, cfg, h, pos, tmask, smask,
                 k_ctx=None if ctx is None else ctx[0],
                 v_ctx=None if ctx is None else ctx[1],
-                q_offset=qoff, enc_kv=enc))
+                q_offset=qoff, enc_kv=enc, plane_mesh=plane_mesh))
         self.rec = {
             kind: wrap("rec-" + kind,
                        lambda p, h, tmask, smask, state, kind=kind:
@@ -87,14 +92,41 @@ class _PrefillFns(StageFns):
 
 # keyed structurally like device_pool's registries so value-equal configs
 # share one compile cache across engines
-_PREFILL_FNS: Dict[str, _PrefillFns] = {}
+_PREFILL_FNS: Dict[Any, _PrefillFns] = {}
 
 
-def prefill_fns_for(cfg) -> _PrefillFns:
-    key = repr(cfg)
+def prefill_fns_for(cfg, plane_mesh=None) -> _PrefillFns:
+    key = (repr(cfg), None if plane_mesh is None else plane_mesh.key())
     if key not in _PREFILL_FNS:
-        _PREFILL_FNS[key] = _PrefillFns(cfg)
+        _PREFILL_FNS[key] = _PrefillFns(cfg, plane_mesh)
     return _PREFILL_FNS[key]
+
+
+class _AdmitEmbedFns(StageFns):
+    """ONE jitted bucketed embedding launch for a whole admission batch.
+
+    Admission used to embed eagerly one request at a time (one lookup
+    launch per admitted request per iteration); the engine now collects
+    every pure-text request admitted in an iteration, pads the token ids
+    to (batch bucket, token bucket), and runs this single stage —
+    ``trace_count == len(shape_signatures)`` bounds compiles by the bucket
+    grid, independent of how many requests arrive together."""
+
+    def __init__(self, cfg):
+        super().__init__()
+        self.cfg = cfg
+        self.embed = self.wrap(
+            "admit-embed", lambda params, tokens: params["embed"][tokens])
+
+
+_ADMIT_EMBED_FNS: Dict[str, _AdmitEmbedFns] = {}
+
+
+def admit_embed_fns_for(cfg) -> _AdmitEmbedFns:
+    key = repr(cfg)
+    if key not in _ADMIT_EMBED_FNS:
+        _ADMIT_EMBED_FNS[key] = _AdmitEmbedFns(cfg)
+    return _ADMIT_EMBED_FNS[key]
 
 
 @dataclasses.dataclass
@@ -130,10 +162,12 @@ class PrefillPlane:
     per-layer KV out of the context buffer (fused D2H saves + pool builds)
     and extracts recurrent states at finalize."""
 
-    def __init__(self, cfg, policy: Optional[BucketingPolicy] = None):
+    def __init__(self, cfg, policy: Optional[BucketingPolicy] = None,
+                 plane_mesh=None):
         self.cfg = cfg
         self.policy = policy or BucketingPolicy()
-        self.fns = prefill_fns_for(cfg)
+        self.plane_mesh = plane_mesh
+        self.fns = prefill_fns_for(cfg, plane_mesh)
         self.b_cap = 0
         self.s_cap = 0
         self.hidden: Optional[jax.Array] = None      # (B_cap, S_cap, d)

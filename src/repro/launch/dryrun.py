@@ -41,7 +41,7 @@ def lower_one(arch: str, shape_name: str, *, multi_pod: bool = False,
     cfg = get_config(arch)
     mesh = make_production_mesh(multi_pod=multi_pod)
     n_chips = mesh.devices.size
-    from repro.models import attention as attn_mod
+    from repro.launch.plane_mesh import PlaneMesh
     from repro.models import ffn as ffn_mod
     dp = ("pod", "data") if multi_pod else ("data",)
     if moe_ep:
@@ -50,13 +50,13 @@ def lower_one(arch: str, shape_name: str, *, multi_pod: bool = False,
     else:
         ffn_mod.EP_AXES = None
         ffn_mod.EP_MESH = None
-    if cp_decode:
-        attn_mod.CP_AXES = (dp, "model")
-        attn_mod.CP_MESH = mesh
-    else:
-        attn_mod.CP_AXES = None
-        attn_mod.CP_MESH = None
-    fn, args, kind = step_and_specs(cfg, shape_name, remat=remat)
+    # context-parallel decode arrives as an EXPLICIT PlaneMesh threaded
+    # through step_and_specs -> decode_step (the former attention.CP_AXES
+    # module-global mutation is gone)
+    pm = (PlaneMesh(mesh=mesh, dp_axes=dp, model_axis="model")
+          if cp_decode else None)
+    fn, args, kind = step_and_specs(cfg, shape_name, remat=remat,
+                                    plane_mesh=pm)
 
     # shardings per argument pytree
     if kind == "train":

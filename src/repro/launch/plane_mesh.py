@@ -1,0 +1,178 @@
+"""PlaneMesh — explicit mesh threading for the jitted serving planes.
+
+Before this module, context parallelism reached the model only through the
+``attention.CP_AXES`` module global, mutated by ``launch/dryrun.py`` and
+read at trace time by the FUSED decode step — the staged decode plane and
+the prefill plane were single-device only.  ``PlaneMesh`` replaces the
+global with an explicit value threaded through every entry point that can
+shard:
+
+* ``models.model.decode_step(..., plane_mesh=...)`` — the fused
+  context-parallel decode path (what dryrun lowers);
+* ``core.device_pool.DevicePoolPlane(..., plane_mesh=...)`` — the staged
+  per-layer decode plane: ``select``/``attend`` stage jits run under
+  ``shard_map`` with the KV pool sharded across the mesh's model axis;
+* ``core.prefill_plane.PrefillPlane(..., plane_mesh=...)`` — per-(layer,
+  chunk) prefill launches run under ``shard_map`` with the token window
+  sharded (sequence parallel) across the model axis;
+* ``serving.engine.EngineConfig.mesh_spec`` — resolved once per engine via
+  ``PlaneMesh.resolve``.
+
+Sharding layout (see docs/architecture.md §7):
+
+* **Decode pool, head mode** (GQA with ``Hkv %% n_model == 0``): pool slots
+  are KV-HEAD-sharded over the model axis.  The paper's head-major
+  ``(B, Hkv, NB, bs, D)`` layout makes this the zero-movement layout —
+  DSA scoring, top-k selection and block-sparse attention are all
+  per-kv-head-local, so NO pool data ever crosses the mesh; only the
+  selected block ids (tiny int32) and the per-head attention outputs are
+  gathered across the model axis.
+* **Decode pool, block mode** (MLA's single latent head; head counts that
+  do not divide the axis): the BLOCK axis is sharded instead.  Each shard
+  appends/scores its local blocks, the (small) block scores are
+  all-gathered so every shard computes the same global top-k, each shard
+  attends over its LOCAL selected blocks, and the flash-style partials
+  merge with a logsumexp psum — the full pool never moves.
+* **Prefill window**: each (layer, chunk) group's QUERIES are
+  sequence-sharded over the model axis — every shard runs the blocked
+  attention (the O(T^2) term) for its query slice against the full window
+  K/V — and only the attention outputs are re-gathered; projections and
+  the layer epilogue run replicated for bitwise exactness.  No pool and
+  no residual stream ever crosses the mesh.
+
+Batch rows additionally shard over the data axes whenever the padded row
+count divides them.  Host stages (FlashD2H write-back, LRU access, fused
+FlashH2D restores) keep addressing the GLOBAL arrays; jax routes each
+block update to the shard that owns it.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional, Tuple
+
+import jax
+from jax.sharding import Mesh
+
+
+@dataclasses.dataclass(frozen=True)
+class PlaneMesh:
+    """(mesh, dp_axes, model_axis) — everything a plane needs to shard.
+
+    ``dp_axes`` are the pure data-parallel axes (batch rows); the
+    ``model_axis`` carries the context-parallel dimension (KV heads,
+    pool blocks, or prefill sequence, chosen per call site).
+    """
+    mesh: Mesh
+    dp_axes: Tuple[str, ...] = ("data",)
+    model_axis: str = "model"
+
+    # -- construction ------------------------------------------------------
+
+    @classmethod
+    def from_mesh(cls, mesh: Mesh) -> "PlaneMesh":
+        from repro.launch.mesh import dp_axes as _dp, model_axis as _ma
+        return cls(mesh=mesh, dp_axes=_dp(mesh), model_axis=_ma(mesh))
+
+    @classmethod
+    def resolve(cls, spec: Any) -> Optional["PlaneMesh"]:
+        """EngineConfig.mesh_spec -> PlaneMesh | None.
+
+        Accepted specs: ``None`` (single-device planes, the default), a
+        ``PlaneMesh``, a ``jax.sharding.Mesh``, an int K or the string
+        ``"model=K"`` (a local mesh with a K-way model axis over this
+        process's devices — ``launch.mesh.make_local_mesh``).
+        """
+        if spec is None:
+            return None
+        if isinstance(spec, cls):
+            return spec
+        if isinstance(spec, Mesh):
+            return cls.from_mesh(spec)
+        if isinstance(spec, int):
+            k = spec
+        elif isinstance(spec, str):
+            body = spec.strip()
+            if "=" in body:
+                key, _, val = body.partition("=")
+                if key.strip() != "model":
+                    raise ValueError(f"unknown mesh_spec {spec!r}; expected "
+                                     f"'model=K', an int, a Mesh or a "
+                                     f"PlaneMesh")
+                k = int(val)
+            else:
+                k = int(body)
+        else:
+            raise ValueError(f"cannot resolve mesh_spec {spec!r}")
+        n = len(jax.devices())
+        if k < 1 or n % k != 0:
+            raise ValueError(f"model axis {k} does not divide the "
+                             f"{n} available devices")
+        from repro.launch.mesh import make_local_mesh
+        return cls.from_mesh(make_local_mesh(model_axis=k))
+
+    # -- sizes -------------------------------------------------------------
+
+    @property
+    def model_size(self) -> int:
+        return int(self.mesh.shape[self.model_axis])
+
+    @property
+    def dp_size(self) -> int:
+        n = 1
+        for a in self.dp_axes:
+            n *= int(self.mesh.shape[a])
+        return n
+
+    def key(self) -> Tuple:
+        """Registry key: value-equal meshes (same axes over the same
+        devices IN THE SAME ORDER) share one per-stage jit registry /
+        compile cache; a permuted device assignment keys separately so a
+        cached stage never places shards on another mesh's layout."""
+        return (tuple(self.mesh.axis_names),
+                tuple(int(s) for s in self.mesh.devices.shape),
+                tuple(d.id for d in self.mesh.devices.flat),
+                self.dp_axes, self.model_axis)
+
+    # -- spec helpers ------------------------------------------------------
+
+    def dp_entry(self, dim: int):
+        """PartitionSpec entry for a batch-row axis of size ``dim``: the
+        data axes when they divide it, else replicated (e.g. B_cap=2 on a
+        4-way data axis)."""
+        n = self.dp_size
+        if n > 1 and dim % n == 0:
+            return self.dp_axes if len(self.dp_axes) > 1 else self.dp_axes[0]
+        return None
+
+    def pool_shard_mode(self, cfg) -> str:
+        """'heads' | 'blocks' — which pool axis the model axis shards.
+
+        KV-head sharding is communication-free for select+attend (head-major
+        layout) but needs ``Hkv %% n_model == 0`` and a real head axis; MLA's
+        latent pool has ONE head, so it (and non-dividing GQA head counts)
+        falls back to block-axis sharding."""
+        n = self.model_size
+        if (cfg.attention_type != "mla" and cfg.num_kv_heads >= n
+                and cfg.num_kv_heads % n == 0):
+            return "heads"
+        return "blocks"
+
+    def round_blocks(self, cfg, nb: int) -> int:
+        """Pool block capacity rounded so the sharded pool divides evenly
+        (only block mode shards the block axis)."""
+        if self.pool_shard_mode(cfg) != "blocks":
+            return nb
+        n = self.model_size
+        return -(-nb // n) * n
+
+    def replicate(self, tree):
+        """Pin every leaf to fully-replicated sharding (an all-gather where
+        the value was sharded).  Stage functions apply this to everything
+        they hand BACK to replicated stages — without it a shard_map
+        out-spec's sharding propagates into the next stage's jit and GSPMD
+        partitions replicated code (e.g. a mamba scan sequence-sharded by a
+        leaked prefill residual), changing numerics."""
+        from jax.sharding import NamedSharding, PartitionSpec
+        s = NamedSharding(self.mesh, PartitionSpec())
+        return jax.tree.map(
+            lambda x: jax.lax.with_sharding_constraint(x, s), tree)

@@ -45,9 +45,16 @@ def _axis_size(mesh: Mesh, name: str) -> int:
     return mesh.shape[name] if name in mesh.axis_names else 1
 
 
-def _div(dim: int, mesh: Mesh, axis: str) -> bool:
+def axis_divides(dim: int, mesh: Mesh, axis: str) -> bool:
+    """True when `axis` exists, is >1-way, and evenly divides `dim` — the
+    shard-or-replicate rule every spec in this module applies (the planes'
+    ``PlaneMesh.dp_entry`` applies the same rule over the product of its
+    data axes)."""
     n = _axis_size(mesh, axis)
     return n > 1 and dim % n == 0
+
+
+_div = axis_divides
 
 
 def dp_spec(mesh: Mesh, dim: int):

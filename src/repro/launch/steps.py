@@ -147,16 +147,21 @@ def make_prefill_step(cfg: ModelConfig, seq_len: int) -> Callable:
     return prefill_step
 
 
-def make_serve_step(cfg: ModelConfig, attn_impl: str = "ref") -> Callable:
+def make_serve_step(cfg: ModelConfig, attn_impl: str = "ref",
+                    plane_mesh=None) -> Callable:
+    """plane_mesh: ``launch.plane_mesh.PlaneMesh`` — lower the decode step
+    context-parallel (block-sharded pools) instead of plain GSPMD; replaces
+    the former ``attention.CP_AXES`` module-global mutation."""
     def serve_step(params, tokens, state):
         logits, new_state = M.decode_step(params, cfg, tokens, state,
-                                          attn_impl=attn_impl)
+                                          attn_impl=attn_impl,
+                                          plane_mesh=plane_mesh)
         return logits, new_state
     return serve_step
 
 
 def step_and_specs(cfg: ModelConfig, shape_name: str, *, remat: bool = True,
-                   stacked: Optional[bool] = None
+                   stacked: Optional[bool] = None, plane_mesh=None
                    ) -> Tuple[Callable, Tuple, str]:
     """Returns (fn, ordered_args_specs, kind) for lowering."""
     sp = SHAPES[shape_name]
@@ -169,7 +174,7 @@ def step_and_specs(cfg: ModelConfig, shape_name: str, *, remat: bool = True,
     if sp.kind == "prefill":
         fn = make_prefill_step(cfg, sp.seq_len)
         return fn, (params, specs["inputs"]), "prefill"
-    fn = make_serve_step(cfg)
+    fn = make_serve_step(cfg, plane_mesh=plane_mesh)
     state = abstract_decode_state(cfg, sp.global_batch, sp.seq_len,
                                   stacked=stacked)
     return fn, (params, specs["tokens"], state), "decode"

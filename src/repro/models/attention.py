@@ -36,12 +36,15 @@ EXACT_COST_MODE = False
 
 # Context-parallel decode (shard_map) — §Perf optimization.  Baseline GSPMD
 # all-gathers the block-sharded KV pool for the DSA gather (GBs per step);
-# the CP path keeps pool blocks on their shard: only the (small) block
-# SCORES are all-gathered, the global top-k is computed redundantly per
-# shard, each shard attends over its LOCAL selected blocks, and partials
-# merge with a logsumexp psum.  Set by the launcher; None -> GSPMD path.
-CP_AXES = None       # ((dp axes...), model_axis)
-CP_MESH = None
+# the CP paths keep pool data on its shard: in BLOCK mode only the (small)
+# block SCORES are all-gathered, the global top-k is computed redundantly
+# per shard, each shard attends over its LOCAL selected blocks, and
+# partials merge with a logsumexp psum; in HEAD mode (staged plane,
+# Hkv % n == 0) even that is unnecessary — selection and attention are
+# per-kv-head-local and only the selected ids / per-head outputs cross the
+# mesh.  The mesh arrives as an explicit ``launch.plane_mesh.PlaneMesh``
+# threaded through every entry point (None -> single-device path); the
+# former ``CP_AXES`` module global is gone.
 
 
 # ---------------------------------------------------------------------------
@@ -439,16 +442,14 @@ def _cp_mla_decode_local(cfg: ModelConfig, q_eff, latent, kpool, meta,
 
 
 def cp_mla_decode_attention(cfg: ModelConfig, q_eff, latent, cache, cur_len,
-                            *, dp_axes=("data",), model_axis="model",
-                            mesh=None):
-    """Context-parallel MLA decode (latent pool sharded over `model`)."""
+                            *, pm):
+    """Context-parallel MLA decode (latent pool block-sharded over the
+    model axis).  pm: ``launch.plane_mesh.PlaneMesh``."""
     from jax.sharding import PartitionSpec as P
-    n_dp = 1
-    for a in dp_axes:
-        n_dp *= dict(mesh.shape)[a] if mesh is not None else 1
-    B = q_eff.shape[0]
-    dp = (dp_axes if len(dp_axes) > 1 else dp_axes[0]) \
-        if (n_dp > 1 and B % n_dp == 0) else None
+    # drop batch sharding when B doesn't divide the dp axes (e.g. batch=1
+    # long-context decode: pure context parallelism over the model axis)
+    dp = pm.dp_entry(q_eff.shape[0])
+    model_axis = pm.model_axis
     vec = P(dp, None, None)
     lat_s = P(dp, None)
     pool_s = P(dp, None, model_axis, None, None)
@@ -456,7 +457,7 @@ def cp_mla_decode_attention(cfg: ModelConfig, q_eff, latent, cache, cur_len,
     fn = shard_map_compat(
         lambda q_, lt_, kp_, mt_, cl_: _cp_mla_decode_local(
             cfg, q_, lt_, kp_, mt_, cl_, model_axis),
-        mesh=mesh,
+        mesh=pm.mesh,
         in_specs=(vec, lat_s, pool_s, meta_s, P(dp)),
         out_specs=(vec, pool_s, meta_s, vec))
     o_lat, kpool, meta, idx = fn(q_eff, latent, cache["k"], cache["meta"],
@@ -464,23 +465,17 @@ def cp_mla_decode_attention(cfg: ModelConfig, q_eff, latent, cache, cur_len,
     return o_lat, {"k": kpool, "meta": meta}, idx
 
 
-def cp_decode_attention(cfg: ModelConfig, q, k, v, cache, cur_len, *,
-                        dp_axes=("data",), model_axis="model", mesh=None):
-    """shard_map context-parallel select-then-compute decode attention.
+def cp_decode_attention(cfg: ModelConfig, q, k, v, cache, cur_len, *, pm):
+    """shard_map context-parallel select-then-compute decode attention
+    (fused form: the whole select+attend in ONE shard_map; the staged
+    plane uses the split ``gqa_select_step_cp``/``gqa_attend_step_cp``).
 
     q (B,Hq,hd); k/v (B,Hkv,hd) new-token projections; cache pools sharded
-    (dp, None, model, None, None).  Returns (o, new_cache, selected)."""
+    (dp, None, model, None, None).  pm: ``launch.plane_mesh.PlaneMesh``.
+    Returns (o, new_cache, selected)."""
     from jax.sharding import PartitionSpec as P
-    # drop batch sharding when B doesn't divide the dp axes (e.g. batch=1
-    # long-context decode: pure context parallelism over `model`)
-    n_dp = 1
-    for a in dp_axes:
-        n_dp *= dict(mesh.shape)[a] if mesh is not None else 1
-    B = q.shape[0]
-    if n_dp > 1 and B % n_dp == 0:
-        dp = dp_axes if len(dp_axes) > 1 else dp_axes[0]
-    else:
-        dp = None
+    dp = pm.dp_entry(q.shape[0])
+    model_axis = pm.model_axis
     vec = P(dp, None, None)
     pool_s = P(dp, None, model_axis, None, None)
     meta_s = P(*([dp, None, model_axis]
@@ -488,12 +483,268 @@ def cp_decode_attention(cfg: ModelConfig, q, k, v, cache, cur_len, *,
     fn = shard_map_compat(
         lambda q_, k_, v_, kp_, vp_, mt_, cl_: _cp_decode_local(
             cfg, q_, k_, v_, kp_, vp_, mt_, cl_, model_axis),
-        mesh=mesh,
+        mesh=pm.mesh,
         in_specs=(vec, vec, vec, pool_s, pool_s, meta_s, P(dp)),
         out_specs=(vec, pool_s, pool_s, meta_s, vec))
     o, kpool, vpool, meta, idx = fn(q, k, v, cache["k"], cache["v"],
                                     cache["meta"], cur_len)
     return o, {"k": kpool, "v": vpool, "meta": meta}, idx
+
+
+# ---------------------------------------------------------------------------
+# Context-parallel STAGED decode stages (the sharded plane's select/attend)
+#
+# Mirrors of ``gqa/mla_select_step`` and ``gqa/mla_attend_step`` whose
+# pool-touching core runs under shard_map so the plane's persistent pool
+# slots live sharded across ``pm.model_axis``.  Two layouts (see
+# ``PlaneMesh.pool_shard_mode``):
+#
+# * "heads" — pool sharded on the KV-HEAD axis.  Scoring, top-k and
+#   block-sparse attention are per-kv-head-local, so select and attend run
+#   with ZERO pool communication; the out_specs' reassembly of the selected
+#   ids (select) and the per-head outputs (attend) is the only data that
+#   crosses the model axis.
+# * "blocks" — pool sharded on the BLOCK axis (MLA latent pools; head
+#   counts that don't divide).  Select all-gathers only the block SCORES
+#   (B,Hkv,NB fp32) and computes the global top-k redundantly per shard;
+#   attend computes flash partials over the LOCAL selected blocks and
+#   merges with a logsumexp psum.
+#
+# Either way the selections handed back to the host are GLOBAL block ids,
+# so the engine's LRU / FlashD2H / FlashH2D staging is layout-agnostic.
+# Projections (q/k/v, output) and the layer epilogue stay replicated
+# outside the shard_map.
+# ---------------------------------------------------------------------------
+
+
+def gqa_select_step_cp(p: Dict[str, jax.Array], cfg: ModelConfig,
+                       x: jax.Array, cache: Dict[str, jax.Array],
+                       cur_len: jax.Array, pm, *,
+                       step_mask: Optional[jax.Array] = None):
+    """Sharded select stage: append new KV + update metadata + score +
+    top-k with the pool sharded per ``pm``.  Returns (q, new_cache, idx,
+    valid) exactly like ``gqa_select_step``; idx/valid are GLOBAL."""
+    from jax.sharding import PartitionSpec as P
+    if not cfg.dsa.enabled:
+        raise NotImplementedError("sharded planes require DSA "
+                                  "(cfg.dsa.enabled)")
+    bs = cfg.dsa.block_size
+    q, k, v = _gqa_project_decode(p, cfg, x, cur_len)
+    B, Hq, hd = q.shape
+    Hkv = cache["k"].shape[1]
+    G = Hq // Hkv
+    mask = (step_mask if step_mask is not None
+            else jnp.ones((B,), dtype=bool))
+    dp = pm.dp_entry(B)
+    m = pm.model_axis
+    mode = pm.pool_shard_mode(cfg)
+    vec = P(dp)
+
+    if mode == "heads":
+        pool_s = P(dp, m, None, None, None)
+        meta_s = P(*([dp, m] + [None] * (cache["meta"].ndim - 2)))
+        hvec = P(dp, m, None)
+
+        def body(q4_, k_, v_, kp_, vp_, mt_, cl_, mk_):
+            blk, slot = cl_ // bs, cl_ % bs
+            kp_ = _append_masked(kp_, k_, blk, slot, mk_)
+            vp_ = _append_masked(vp_, v_, blk, slot, mk_)
+            mt_ = _update_meta_masked(mt_, k_, blk, slot, mk_, cfg.dsa)
+            Bl, Hl = q4_.shape[0], q4_.shape[1]
+            qh = q4_.reshape(Bl, Hl * G, q4_.shape[-1])
+            scores = dsa.score_blocks(qh, mt_, cfg.dsa.metadata)
+            idx_, valid_ = dsa.select_blocks(scores, cfg.dsa, cl_ + 1)
+            return kp_, vp_, mt_, idx_, valid_
+
+        fn = shard_map_compat(
+            body, mesh=pm.mesh,
+            in_specs=(P(dp, m, None, None), hvec, hvec, pool_s, pool_s,
+                      meta_s, vec, vec),
+            out_specs=(pool_s, pool_s, meta_s, P(dp, m, None),
+                       P(dp, m, None)))
+        kp, vp, mt, idx, valid = fn(q.reshape(B, Hkv, G, hd), k, v,
+                                    cache["k"], cache["v"], cache["meta"],
+                                    cur_len, mask)
+        # pools STAY sharded; the ids handed to the host / attend go back
+        # to replicated so their sharding cannot leak into later stages
+        idx, valid = pm.replicate((idx, valid))
+        return q, {"k": kp, "v": vp, "meta": mt}, idx, valid
+
+    pool_s = P(dp, None, m, None, None)
+    meta_s = P(*([dp, None, m] + [None] * (cache["meta"].ndim - 3)))
+
+    def body(q_, k_, v_, kp_, vp_, mt_, cl_, mk_):
+        NB_loc = kp_.shape[2]
+        offset = jax.lax.axis_index(m) * NB_loc
+        blk, slot = cl_ // bs, cl_ % bs
+        mine = (blk >= offset) & (blk < offset + NB_loc) & mk_
+        lblk = jnp.clip(blk - offset, 0, NB_loc - 1)
+        kp_ = _append_masked(kp_, k_, lblk, slot, mine)
+        vp_ = _append_masked(vp_, v_, lblk, slot, mine)
+        mt_ = _update_meta_masked(mt_, k_, lblk, slot, mine, cfg.dsa)
+        # all-gather the SCORES (tiny), never the pool: global top-k is
+        # computed redundantly per shard -> replicated GLOBAL ids
+        scores_loc = dsa.score_blocks(q_, mt_, cfg.dsa.metadata)
+        scores = jax.lax.all_gather(scores_loc, m, axis=2, tiled=True)
+        idx_, valid_ = dsa.select_blocks(scores, cfg.dsa, cl_ + 1)
+        return kp_, vp_, mt_, idx_, valid_
+
+    fn = shard_map_compat(
+        body, mesh=pm.mesh,
+        in_specs=(P(dp, None, None), P(dp, None, None), P(dp, None, None),
+                  pool_s, pool_s, meta_s, vec, vec),
+        out_specs=(pool_s, pool_s, meta_s, P(dp, None, None),
+                   P(dp, None, None)))
+    kp, vp, mt, idx, valid = fn(q, k, v, cache["k"], cache["v"],
+                                cache["meta"], cur_len, mask)
+    idx, valid = pm.replicate((idx, valid))
+    return q, {"k": kp, "v": vp, "meta": mt}, idx, valid
+
+
+def gqa_attend_step_cp(p: Dict[str, jax.Array], cfg: ModelConfig,
+                       q: jax.Array, cache: Dict[str, jax.Array],
+                       cur_len: jax.Array, idx: jax.Array,
+                       valid: jax.Array, pm) -> jax.Array:
+    """Sharded compute stage: block-sparse attention over the sharded
+    (possibly host-restored) pool + output projection.  Read-only on
+    ``cache``; uses the reference attention inside shard_map."""
+    from jax.sharding import PartitionSpec as P
+    B, Hq, hd = q.shape
+    Hkv = cache["k"].shape[1]
+    G = Hq // Hkv
+    dp = pm.dp_entry(B)
+    m = pm.model_axis
+    new_len = cur_len + 1
+
+    if pm.pool_shard_mode(cfg) == "heads":
+        pool_s = P(dp, m, None, None, None)
+
+        def body(q4_, kp_, vp_, nl_, idx_, valid_):
+            Bl, Hl = q4_.shape[0], q4_.shape[1]
+            qh = q4_.reshape(Bl, Hl * G, q4_.shape[-1])
+            o = dsa.sparse_decode_attention_ref(qh, kp_, vp_, idx_, valid_,
+                                                nl_)
+            return o.reshape(Bl, Hl, G, o.shape[-1])
+
+        fn = shard_map_compat(
+            body, mesh=pm.mesh,
+            in_specs=(P(dp, m, None, None), pool_s, pool_s, P(dp),
+                      P(dp, m, None), P(dp, m, None)),
+            out_specs=P(dp, m, None, None))
+        o = pm.replicate(fn(q.reshape(B, Hkv, G, hd), cache["k"],
+                            cache["v"], new_len, idx, valid))
+        return o.reshape(B, Hq * o.shape[-1]) @ p["wo"]
+
+    pool_s = P(dp, None, m, None, None)
+
+    def body(q_, kp_, vp_, nl_, idx_, valid_):
+        NB_loc = kp_.shape[2]
+        offset = jax.lax.axis_index(m) * NB_loc
+        loc_valid = valid_ & (idx_ >= offset) & (idx_ < offset + NB_loc)
+        lidx = jnp.clip(idx_ - offset, 0, NB_loc - 1)
+        acc, mx, l = dsa.sparse_decode_attention_partial(
+            q_, kp_, vp_, lidx, loc_valid, nl_, offset)
+        m_g = jax.lax.pmax(mx, m)
+        corr = jnp.where(jnp.isfinite(mx), jnp.exp(mx - m_g), 0.0)
+        l_g = jax.lax.psum(l * corr, m)
+        acc_g = jax.lax.psum(acc * corr[..., None], m)
+        return (acc_g / jnp.maximum(l_g, 1e-30)[..., None]).astype(q_.dtype)
+
+    fn = shard_map_compat(
+        body, mesh=pm.mesh,
+        in_specs=(P(dp, None, None), pool_s, pool_s, P(dp),
+                  P(dp, None, None), P(dp, None, None)),
+        out_specs=P(dp, None, None))
+    o = pm.replicate(fn(q, cache["k"], cache["v"], new_len, idx, valid))
+    return o.reshape(B, Hq * o.shape[-1]) @ p["wo"]
+
+
+def mla_select_step_cp(p: Dict[str, jax.Array], cfg: ModelConfig,
+                       x: jax.Array, cache: Dict[str, jax.Array],
+                       cur_len: jax.Array, pm, *,
+                       step_mask: Optional[jax.Array] = None):
+    """MLA sharded select stage (latent pool: ONE kv head -> always block
+    mode).  Returns (q_eff, new_cache, idx, valid); idx GLOBAL."""
+    from jax.sharding import PartitionSpec as P
+    if not cfg.dsa.enabled:
+        raise NotImplementedError("sharded planes require DSA "
+                                  "(cfg.dsa.enabled)")
+    bs = cfg.dsa.block_size
+    q_eff, latent = _mla_project_decode(p, cfg, x, cur_len)
+    B = q_eff.shape[0]
+    mask = (step_mask if step_mask is not None
+            else jnp.ones((B,), dtype=bool))
+    dp = pm.dp_entry(B)
+    m = pm.model_axis
+    pool_s = P(dp, None, m, None, None)
+    meta_s = P(*([dp, None, m] + [None] * (cache["meta"].ndim - 3)))
+
+    def body(q_, lat_, kp_, mt_, cl_, mk_):
+        NB_loc = kp_.shape[2]
+        offset = jax.lax.axis_index(m) * NB_loc
+        blk, slot = cl_ // bs, cl_ % bs
+        mine = (blk >= offset) & (blk < offset + NB_loc) & mk_
+        lblk = jnp.clip(blk - offset, 0, NB_loc - 1)
+        lat1 = lat_[:, None, :]
+        kp_ = _append_masked(kp_, lat1, lblk, slot, mine)
+        mt_ = _update_meta_masked(mt_, lat1, lblk, slot, mine, cfg.dsa)
+        scores_loc = dsa.score_blocks(q_, mt_, cfg.dsa.metadata)
+        scores = jax.lax.all_gather(scores_loc, m, axis=2, tiled=True)
+        idx_, valid_ = dsa.select_blocks(scores, cfg.dsa, cl_ + 1)
+        return kp_, mt_, idx_, valid_
+
+    fn = shard_map_compat(
+        body, mesh=pm.mesh,
+        in_specs=(P(dp, None, None), P(dp, None), pool_s, meta_s,
+                  P(dp), P(dp)),
+        out_specs=(pool_s, meta_s, P(dp, None, None), P(dp, None, None)))
+    kp, mt, idx, valid = fn(q_eff, latent, cache["k"], cache["meta"],
+                            cur_len, mask)
+    idx, valid = pm.replicate((idx, valid))
+    return q_eff, {"k": kp, "meta": mt}, idx, valid
+
+
+def mla_attend_step_cp(p: Dict[str, jax.Array], cfg: ModelConfig,
+                       q_eff: jax.Array, cache: Dict[str, jax.Array],
+                       cur_len: jax.Array, idx: jax.Array,
+                       valid: jax.Array, pm) -> jax.Array:
+    """MLA sharded compute stage: latent block-sparse attention partials
+    over the local shard + logsumexp merge + value/output projection."""
+    from jax.sharding import PartitionSpec as P
+    mc = cfg.mla
+    B = q_eff.shape[0]
+    H = cfg.num_heads
+    dn, dr, dv, lat = (mc.qk_nope_head_dim, mc.qk_rope_head_dim,
+                       mc.v_head_dim, mc.kv_lora_rank)
+    scale = 1.0 / ((dn + dr) ** 0.5)
+    dp = pm.dp_entry(B)
+    m = pm.model_axis
+    pool_s = P(dp, None, m, None, None)
+
+    def body(q_, kp_, nl_, idx_, valid_):
+        NB_loc = kp_.shape[2]
+        offset = jax.lax.axis_index(m) * NB_loc
+        loc_valid = valid_ & (idx_ >= offset) & (idx_ < offset + NB_loc)
+        lidx = jnp.clip(idx_ - offset, 0, NB_loc - 1)
+        acc, mx, l = dsa.sparse_decode_attention_partial(
+            q_, kp_, kp_, lidx, loc_valid, nl_, offset, scale=scale)
+        m_g = jax.lax.pmax(mx, m)
+        corr = jnp.where(jnp.isfinite(mx), jnp.exp(mx - m_g), 0.0)
+        l_g = jax.lax.psum(l * corr, m)
+        acc_g = jax.lax.psum(acc * corr[..., None], m)
+        return (acc_g / jnp.maximum(l_g, 1e-30)[..., None]).astype(q_.dtype)
+
+    fn = shard_map_compat(
+        body, mesh=pm.mesh,
+        in_specs=(P(dp, None, None), pool_s, P(dp), P(dp, None, None),
+                  P(dp, None, None)),
+        out_specs=P(dp, None, None))
+    o_lat = pm.replicate(fn(q_eff, cache["k"], cur_len + 1,
+                            idx, valid))[..., :lat]
+    w_uv = p["w_uv"].reshape(lat, H, dv)
+    o = jnp.einsum("bhl,lhd->bhd", o_lat.astype(jnp.float32),
+                   w_uv.astype(jnp.float32)).astype(q_eff.dtype)
+    return o.reshape(B, H * dv) @ p["wo"]
 
 
 # ---------------------------------------------------------------------------
@@ -584,7 +835,7 @@ def gqa_attend_step(p: Dict[str, jax.Array], cfg: ModelConfig, q: jax.Array,
 def gqa_decode_step(p: Dict[str, jax.Array], cfg: ModelConfig, x: jax.Array,
                     cache: Dict[str, jax.Array], cur_len: jax.Array,
                     *, attn_impl: str = "ref",
-                    cp_axis: Optional[str] = None,
+                    plane_mesh=None,
                     step_mask: Optional[jax.Array] = None
                     ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
     """One decode token, select and attend FUSED in one trace.
@@ -592,7 +843,8 @@ def gqa_decode_step(p: Dict[str, jax.Array], cfg: ModelConfig, x: jax.Array,
 
     Select-then-compute (paper Fig. 2): write new KV -> update metadata ->
     score blocks -> top-k -> block-sparse attention.
-    cp_axis: context-parallel mesh axis name (pool blocks sharded) or None.
+    plane_mesh: ``launch.plane_mesh.PlaneMesh`` — context-parallel decode
+    over a block-sharded pool (one fused shard_map) — or None.
     step_mask: optional (B,) bool — rows where False keep their pool/meta
     byte-for-byte unchanged (the persistent device plane steps a padded
     batch whose inactive rows must not mutate; attention still computes
@@ -601,11 +853,15 @@ def gqa_decode_step(p: Dict[str, jax.Array], cfg: ModelConfig, x: jax.Array,
     B, _ = x.shape
     Hq, hd = cfg.num_heads, cfg.head_dim
 
-    if CP_AXES is not None and cfg.dsa.enabled:
+    if plane_mesh is not None and cfg.dsa.enabled:
+        if step_mask is not None:
+            raise NotImplementedError(
+                "fused context-parallel decode does not support step_mask "
+                "(the sharded PLANES use the staged select/attend split; "
+                "sharding the fused persistent plane is a follow-up)")
         q, k, v = _gqa_project_decode(p, cfg, x, cur_len)
-        o, new_cache, sel = cp_decode_attention(
-            cfg, q, k, v, cache, cur_len,
-            dp_axes=CP_AXES[0], model_axis=CP_AXES[1], mesh=CP_MESH)
+        o, new_cache, sel = cp_decode_attention(cfg, q, k, v, cache,
+                                                cur_len, pm=plane_mesh)
         out = o.reshape(B, Hq * hd) @ p["wo"]
         return out, new_cache, sel
 
@@ -745,12 +1001,13 @@ def mla_attend_step(p: Dict[str, jax.Array], cfg: ModelConfig,
 
 def mla_decode_step(p: Dict[str, jax.Array], cfg: ModelConfig, x: jax.Array,
                     cache: Dict[str, jax.Array], cur_len: jax.Array,
-                    *, attn_impl: str = "ref",
+                    *, attn_impl: str = "ref", plane_mesh=None,
                     step_mask: Optional[jax.Array] = None):
     """Absorbed-form MLA decode, select and attend FUSED in one trace (see
     the GQA stage split above): the latent cache behaves as a single KV head
     with key dim (kv_lora_rank + rope) and value = latent (kv_lora_rank).
     DSA metadata lives in latent space — beyond-paper extension (DESIGN §4).
+    plane_mesh: see ``gqa_decode_step`` (latent pool block-sharded).
     step_mask: see ``gqa_decode_step`` — False rows leave the cache unchanged.
     """
     m = cfg.mla
@@ -758,11 +1015,14 @@ def mla_decode_step(p: Dict[str, jax.Array], cfg: ModelConfig, x: jax.Array,
     H = cfg.num_heads
     dv, lat = m.v_head_dim, m.kv_lora_rank
 
-    if CP_AXES is not None and cfg.dsa.enabled:
+    if plane_mesh is not None and cfg.dsa.enabled:
+        if step_mask is not None:
+            raise NotImplementedError(
+                "fused context-parallel decode does not support step_mask "
+                "(see gqa_decode_step)")
         q_eff, latent = _mla_project_decode(p, cfg, x, cur_len)
         o_lat, new_cache, sel = cp_mla_decode_attention(
-            cfg, q_eff, latent, cache, cur_len,
-            dp_axes=CP_AXES[0], model_axis=CP_AXES[1], mesh=CP_MESH)
+            cfg, q_eff, latent, cache, cur_len, pm=plane_mesh)
         o_lat = o_lat[..., :lat]
         w_uv = p["w_uv"].reshape(lat, H, dv)
         o = jnp.einsum("bhl,lhd->bhd", o_lat.astype(jnp.float32),

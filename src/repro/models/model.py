@@ -219,18 +219,28 @@ def layer_forward(p: Dict, cfg: ModelConfig, x: jax.Array,
             h = out
         x = x + h
 
+    x, aux = _layer_epilogue(p, cfg, x, enc_kv, moe_drop_free)
+    return x, aux, kv_out, new_rec
+
+
+def _layer_epilogue(p: Dict, cfg: ModelConfig, x: jax.Array, enc_kv,
+                    moe_drop_free: bool):
+    """Post-mixer part of a full-sequence layer: cross-attention (whisper)
+    + FFN/MoE.  One implementation shared by ``layer_forward`` and the
+    sequence-sharded prefill path so their numerics can never drift.
+    Returns (x_out, aux_loss)."""
+    aux = jnp.zeros((), jnp.float32)
     if enc_kv is not None and "cross" in p:
         h = attn.cross_attention(p["cross"], cfg,
                                  _norm(cfg, p["cross_norm"], x), *enc_kv)
         x = x + h
-
     h_in = _norm(cfg, p["ffn_norm"], x)
     if "moe" in p:
         h, aux = ffn_mod.moe_apply(p["moe"], cfg, h_in,
                                    drop_free=moe_drop_free)
     else:
         h = ffn_mod.ffn_apply(p["ffn"], h_in)
-    return x + h, aux, kv_out, new_rec
+    return x + h, aux
 
 
 # ---------------------------------------------------------------------------
@@ -604,7 +614,7 @@ def prefill_attn_layer_batched(p: Dict, cfg: ModelConfig, h: jax.Array,
                                positions: jax.Array, token_mask: jax.Array,
                                step_mask: jax.Array, *,
                                k_ctx=None, v_ctx=None, q_offset=0,
-                               enc_kv=None):
+                               enc_kv=None, plane_mesh=None):
     """One ATTENTION layer over a padded batch of same-layer segments.
 
     h: (B, T, d) — the rows' residual stream over this segment's token
@@ -613,11 +623,19 @@ def prefill_attn_layer_batched(p: Dict, cfg: ModelConfig, h: jax.Array,
     q_offset: the window's absolute start (scalar; traced, so distinct
     chunk starts share one compile per shape).
 
+    plane_mesh: sequence-shard the window across the mesh's model axis
+    (``_prefill_attn_layer_batched_cp``); MLA layers run replicated (no
+    latent-context path to shard — same restriction as chunked segments).
+
     Returns (h_out, kv_out): h_out masked (masked lanes preserve the
     incoming residual, parked rows return unchanged); kv_out = (k, v) each
     (B, T, Hkv, hd) — or (latent,) (B, T, lat) for MLA — valid where
     token_mask is set.
     """
+    if plane_mesh is not None and cfg.attention_type != "mla":
+        return _prefill_attn_layer_batched_cp(
+            p, cfg, h, positions, token_mask, step_mask, k_ctx=k_ctx,
+            v_ctx=v_ctx, q_offset=q_offset, enc_kv=enc_kv, pm=plane_mesh)
     x, _, kv_out, _ = layer_forward(p, cfg, h, positions, kind="attn",
                                     enc_kv=enc_kv, k_ctx=k_ctx, v_ctx=v_ctx,
                                     q_offset=q_offset, return_kv=True,
@@ -629,6 +647,68 @@ def prefill_attn_layer_batched(p: Dict, cfg: ModelConfig, h: jax.Array,
     # byte-for-byte unchanged
     x = jnp.where(token_mask[..., None] & step_mask[:, None, None], x, h)
     return x, kv_out
+
+
+def _prefill_attn_layer_batched_cp(p: Dict, cfg: ModelConfig, h: jax.Array,
+                                   positions: jax.Array,
+                                   token_mask: jax.Array,
+                                   step_mask: jax.Array, *,
+                                   k_ctx, v_ctx, q_offset, enc_kv, pm):
+    """Sequence-sharded GQA prefill layer (context-parallel prefill).
+
+    Only the quadratic part is sharded: the window's QUERIES split across
+    ``pm.model_axis`` and each shard runs blocked attention of its query
+    slice against the full window K/V; the out-spec reassembles the
+    attention outputs.  Projections and the layer epilogue (residual, Wo,
+    cross-attn, FFN/MoE) run replicated at the SAME shapes as the
+    single-device path, and every value handed onward is pinned back to
+    replicated sharding (``pm.replicate``) — both deliberately, for
+    exactness: per-shard matmul row counts and leaked out-spec shardings
+    each perturb numerics (a leaked sequence sharding would GSPMD-partition
+    a later mamba scan), which breaks the token-identical oracle bar.
+    Windows that do not divide the axis are padded with causally-invisible
+    tail tokens (key index > every real query position) and trimmed after.
+    """
+    from jax.sharding import PartitionSpec as P
+    from repro.models.common import shard_map_compat
+    m = pm.model_axis
+    n = pm.model_size
+    B, T, _ = h.shape
+    pad = (-T) % n
+    hp = jnp.pad(h, ((0, 0), (0, pad), (0, 0))) if pad else h
+    pos_p = (jnp.pad(positions, ((0, 0), (0, pad)), mode="edge")
+             if pad else positions)
+    T_loc = (T + pad) // n
+    scale = 1.0 / (cfg.head_dim ** 0.5)
+
+    # replicated projections — bitwise-identical to the single-device path
+    h_in = _norm(cfg, p["attn_norm"], hp)
+    q, k, v = attn.gqa_project_qkv(p["attn"], cfg, h_in, pos_p)
+    k_all, v_all = k, v
+    if k_ctx is not None:
+        k_all = jnp.concatenate([k_ctx, k_all], axis=1)
+        v_all = jnp.concatenate([v_ctx, v_all], axis=1)
+
+    def body(q_l, k_, v_, qo_):
+        qo_loc = qo_ + jax.lax.axis_index(m) * T_loc
+        return attn.flash_attention_jnp(q_l, k_, v_, scale=scale,
+                                        causal=True, q_offset=qo_loc)
+
+    seq4 = P(None, m, None, None)
+    rep4 = P(None, None, None, None)
+    fn = shard_map_compat(body, mesh=pm.mesh,
+                          in_specs=(seq4, rep4, rep4, P()),
+                          out_specs=seq4)
+    o = pm.replicate(fn(q, k_all, v_all, jnp.asarray(q_offset, jnp.int32)))
+    x = hp + o.reshape(B, T + pad, -1) @ p["attn"]["wo"]
+    if pad:
+        x, k, v = x[:, :T], k[:, :T], v[:, :T]
+    # replicated epilogue on the full window — the SAME implementation
+    # layer_forward runs, so the paths cannot drift (see docstring)
+    x, _ = _layer_epilogue(p, cfg, x, enc_kv, moe_drop_free=True)
+    # same lane-preserving mask as the replicated path
+    x = jnp.where(token_mask[..., None] & step_mask[:, None, None], x, h)
+    return pm.replicate((x, (k, v)))
 
 
 def prefill_recurrent_layer_batched(p: Dict, cfg: ModelConfig, kind: str,
@@ -792,12 +872,16 @@ def _decode_epilogue(p: Dict, cfg: ModelConfig, x: jax.Array, enc_kv):
 
 def _decode_layer(p: Dict, cfg: ModelConfig, kind: str, x: jax.Array,
                   cache, cur_len: jax.Array, enc_kv, attn_impl: str,
-                  step_mask: Optional[jax.Array] = None):
+                  step_mask: Optional[jax.Array] = None,
+                  plane_mesh=None):
     """One decode layer.  Returns (x, new_cache, sel_or_None).
 
     step_mask (B,) bool: rows where False must leave `cache` unchanged —
     paged pools use masked scatter at the source (``attn._append_masked``),
-    recurrent states are reverted leaf-wise."""
+    recurrent states are reverted leaf-wise.
+    plane_mesh: context-parallel mesh for the attention mixer (the FUSED
+    shard_map path; the staged plane shards via decode_select/attend_layer
+    instead); recurrent mixers always run replicated."""
     sel = None
     if kind == "rwkv":
         old = cache
@@ -818,10 +902,12 @@ def _decode_layer(p: Dict, cfg: ModelConfig, kind: str, x: jax.Array,
     elif cfg.attention_type == "mla":
         h, cache, sel = attn.mla_decode_step(p["attn"], cfg, h_in, cache,
                                              cur_len, attn_impl=attn_impl,
+                                             plane_mesh=plane_mesh,
                                              step_mask=step_mask)
     else:
         h, cache, sel = attn.gqa_decode_step(p["attn"], cfg, h_in, cache,
                                              cur_len, attn_impl=attn_impl,
+                                             plane_mesh=plane_mesh,
                                              step_mask=step_mask)
     x = x + h
     return _decode_epilogue(p, cfg, x, enc_kv), cache, sel
@@ -848,11 +934,21 @@ def decode_embed(params: Dict, cfg: ModelConfig, tokens: jax.Array
 
 def decode_select_layer(p: Dict, cfg: ModelConfig, x: jax.Array, cache,
                         cur_len: jax.Array,
-                        step_mask: Optional[jax.Array] = None):
+                        step_mask: Optional[jax.Array] = None,
+                        plane_mesh=None):
     """Select stage of one ATTENTION layer: pre-norm, project, append the
     new token's KV to the paged pool, update DSA metadata, score + top-k.
-    Returns (q, new_cache, idx, valid) — idx/valid None when DSA is off."""
+    Returns (q, new_cache, idx, valid) — idx/valid None when DSA is off.
+    plane_mesh: shard the pool-touching core across the mesh
+    (``attention.gqa/mla_select_step_cp``); idx/valid stay GLOBAL ids."""
     h_in = _norm(cfg, p["attn_norm"], x)
+    if plane_mesh is not None:
+        if cfg.attention_type == "mla":
+            return attn.mla_select_step_cp(p["attn"], cfg, h_in, cache,
+                                           cur_len, plane_mesh,
+                                           step_mask=step_mask)
+        return attn.gqa_select_step_cp(p["attn"], cfg, h_in, cache, cur_len,
+                                       plane_mesh, step_mask=step_mask)
     if cfg.attention_type == "mla":
         return attn.mla_select_step(p["attn"], cfg, h_in, cache, cur_len,
                                     step_mask=step_mask)
@@ -863,12 +959,20 @@ def decode_select_layer(p: Dict, cfg: ModelConfig, x: jax.Array, cache,
 def decode_attend_layer(p: Dict, cfg: ModelConfig, x: jax.Array,
                         q: jax.Array, cache, cur_len: jax.Array,
                         idx, valid, enc_kv=None,
-                        attn_impl: str = "ref") -> jax.Array:
+                        attn_impl: str = "ref", plane_mesh=None) -> jax.Array:
     """Compute stage of one ATTENTION layer: block-sparse attention over the
     (possibly restored) pool + residual + cross-attn + FFN.  Reads ``cache``
     but never writes it — the host may have scattered restore payloads into
-    it after the select stage."""
-    if cfg.attention_type == "mla":
+    it after the select stage.  plane_mesh: run the attention core sharded
+    (``attention.gqa/mla_attend_step_cp``); epilogue stays replicated."""
+    if plane_mesh is not None:
+        if cfg.attention_type == "mla":
+            h = attn.mla_attend_step_cp(p["attn"], cfg, q, cache, cur_len,
+                                        idx, valid, plane_mesh)
+        else:
+            h = attn.gqa_attend_step_cp(p["attn"], cfg, q, cache, cur_len,
+                                        idx, valid, plane_mesh)
+    elif cfg.attention_type == "mla":
         h = attn.mla_attend_step(p["attn"], cfg, q, cache, cur_len, idx,
                                  valid, attn_impl=attn_impl)
     else:
@@ -900,7 +1004,7 @@ def decode_logits(params: Dict, cfg: ModelConfig, x: jax.Array,
 
 
 def _decode_scan(params: Dict, cfg: ModelConfig, x: jax.Array, state: Dict,
-                 attn_impl: str):
+                 attn_impl: str, plane_mesh=None):
     """Scan path over stacked layers + stacked caches."""
     kind = layer_kind(cfg, 0)
     cur_len = state["cur_len"]
@@ -910,7 +1014,8 @@ def _decode_scan(params: Dict, cfg: ModelConfig, x: jax.Array, state: Dict,
         enc = (xs["enc_k"], xs["enc_v"]) if "enc_k" in xs else None
         x2, new_cache, sel = _decode_layer(xs["p"], cfg, kind, x_,
                                            xs["cache"], cur_len, enc,
-                                           attn_impl)
+                                           attn_impl,
+                                           plane_mesh=plane_mesh)
         ys = {"cache": new_cache}
         if sel is not None:
             ys["sel"] = sel
@@ -927,7 +1032,8 @@ def _decode_scan(params: Dict, cfg: ModelConfig, x: jax.Array, state: Dict,
 def decode_step(params: Dict, cfg: ModelConfig, tokens: jax.Array,
                 state: Dict, *, attn_impl: str = "ref",
                 return_info: bool = False,
-                step_mask: Optional[jax.Array] = None):
+                step_mask: Optional[jax.Array] = None,
+                plane_mesh=None):
     """tokens: (B,) int32 — one new token per request.
 
     With return_info=True also returns {"selected": {layer: (B,Hkv,K)}} —
@@ -940,7 +1046,11 @@ def decode_step(params: Dict, cfg: ModelConfig, tokens: jax.Array,
     batch shape.  This is what lets the persistent device plane
     (``repro.core.device_pool``) jit ONE bucketed batch shape and step an
     arbitrary subset of resident requests per iteration.  Only supported
-    with list-mode caches (the serving engine's representation)."""
+    with list-mode caches (the serving engine's representation).
+
+    plane_mesh: ``launch.plane_mesh.PlaneMesh`` — fused context-parallel
+    decode over block-sharded pools (what ``launch/dryrun.py`` lowers;
+    formerly the ``attention.CP_AXES`` module global)."""
     B = tokens.shape[0]
     cur_len = state["cur_len"]
     x = params["embed"][tokens]                              # (B, d)
@@ -951,7 +1061,8 @@ def decode_step(params: Dict, cfg: ModelConfig, tokens: jax.Array,
         if step_mask is not None:
             raise ValueError("step_mask requires list-mode caches")
         x, new_caches, sel_stacked = _decode_scan(params, cfg, x, state,
-                                                  attn_impl)
+                                                  attn_impl,
+                                                  plane_mesh=plane_mesh)
         if sel_stacked is not None and return_info:
             for i in range(cfg.num_layers):
                 info["selected"][i] = sel_stacked[i]
@@ -962,7 +1073,8 @@ def decode_step(params: Dict, cfg: ModelConfig, tokens: jax.Array,
             kind = layer_kind(cfg, i)
             x, cache, sel = _decode_layer(
                 p, cfg, kind, x, state["caches"][i], cur_len,
-                index_enc_kvs(enc_kvs, i), attn_impl, step_mask=step_mask)
+                index_enc_kvs(enc_kvs, i), attn_impl, step_mask=step_mask,
+                plane_mesh=plane_mesh)
             if sel is not None:
                 info["selected"][i] = sel
             new_caches.append(cache)

@@ -34,6 +34,10 @@ class HardwareSpec:
     mfu: float = 0.45              # achievable fraction of peak flops
     mbu: float = 0.70              # achievable fraction of hbm bw
     link_eff_fused: float = 0.75   # fused transfers reach this of link peak
+    ici_bw: float = 90e9           # bytes/s inter-chip interconnect (per
+                                   # link: NVLink / TPU ICI) — collective
+                                   # charging for the sharded planes
+    collective_overhead: float = 5e-6  # seconds per collective launch
 
 
 A100_40G = HardwareSpec(
@@ -62,6 +66,19 @@ def fused_transfer_time(hw: HardwareSpec, total_bytes: int) -> float:
     """FlashH2D / FlashD2H: one launch, streaming at link_eff_fused."""
     return (hw.kernel_launch_overhead
             + total_bytes / (hw.host_link_bw * hw.link_eff_fused))
+
+
+def allgather_time(hw: HardwareSpec, total_bytes: int,
+                   n_shards: int) -> float:
+    """Ring all-gather of `total_bytes` (the FULL gathered size) across
+    `n_shards`: each shard sends/receives (n-1)/n of the result over the
+    interconnect.  The sharded planes move only small tensors this way —
+    selected block ids, block scores, one window of fresh prefill K/V —
+    never a pool."""
+    if n_shards <= 1 or total_bytes <= 0:
+        return 0.0
+    return (hw.collective_overhead
+            + total_bytes * (n_shards - 1) / n_shards / hw.ici_bw)
 
 
 def effective_bandwidth(hw: HardwareSpec, n_copies: int, bytes_per_copy: int,
@@ -134,7 +151,8 @@ def prefill_time(hw: HardwareSpec, mc: ModelCost, new_tokens: int,
 
 
 def batched_prefill_time(hw: HardwareSpec, mc: ModelCost,
-                         segs, layers: int = 1) -> float:
+                         segs, layers: int = 1, n_shards: int = 1,
+                         allgather_bytes: int = 0) -> float:
     """ONE batched prefill-plane launch (layer-segmented prefill §3.4).
 
     segs: [(new_tokens, context)] — one entry per request row in the
@@ -144,16 +162,33 @@ def batched_prefill_time(hw: HardwareSpec, mc: ModelCost,
     compute is charged on each row's REAL tokens (padding is bucketed and
     masked, not charged).  The legacy per-request executor is charged with
     the same formula at batch 1, so the modeled plane-vs-legacy difference
-    is exactly the launch amortization."""
+    is exactly the launch amortization.
+
+    n_shards > 1: the launch runs sequence-sharded across the plane mesh's
+    model axis — but ONLY the O(tokens x context) attention term splits
+    over the shards (projections and the FFN/MoE epilogue run replicated
+    by design, for bitwise exactness; see
+    ``model._prefill_attn_layer_batched_cp``), and the sharded attention
+    outputs are re-gathered once per launch (`allgather_bytes`, the full
+    gathered size)."""
+    n = max(n_shards, 1)
     t = hw.kernel_launch_overhead
     for new_tokens, context in segs:
-        t += prefill_time(hw, mc, new_tokens, context, layers=layers)
-    return t
+        t_full = prefill_time(hw, mc, new_tokens, context, layers=layers)
+        if n > 1:
+            # context-independent terms (projections, FFN/MoE) stay
+            # replicated; the attention term (t_full - t_ctx0) shards
+            t_ctx0 = prefill_time(hw, mc, new_tokens, 0, layers=layers)
+            t += t_ctx0 + (t_full - t_ctx0) / n
+        else:
+            t += t_full
+    return t + allgather_time(hw, allgather_bytes, n_shards)
 
 
 def overlapped_decode_time(hw: HardwareSpec, mc: ModelCost, batch: int,
                            attended_tokens_per_req: float,
-                           transfer_bytes_by_layer) -> float:
+                           transfer_bytes_by_layer, n_shards: int = 1,
+                           allgather_bytes_by_layer=None) -> float:
     """Staged-pipeline decode charge (§3.2's H2D/compute overlap).
 
     The fused plane charges decode compute + ALL restore transfer serially
@@ -165,13 +200,24 @@ def overlapped_decode_time(hw: HardwareSpec, mc: ModelCost, batch: int,
     transfer_bytes_by_layer: H2D restore payload bytes per MODEL layer this
     iteration (0 for layers with no misses or no paged KV); entries beyond
     ``mc.num_layers`` are ignored, missing entries charge compute only.
-    """
+
+    n_shards > 1 (sharded plane): each shard scatters only the restore
+    payloads that land in ITS pool slots, so per-layer transfer divides by
+    the shard count; ``allgather_bytes_by_layer`` adds the per-layer
+    collective (selected block ids crossing the model axis so the host can
+    stage GLOBAL ids), charged serially — the host sync sits between
+    select and attend and cannot overlap the layer's own restore."""
     t_layer = decode_time(hw, mc, batch, attended_tokens_per_req) \
         / max(mc.num_layers, 1)
+    n = max(n_shards, 1)
+    ag = list(allgather_bytes_by_layer or [])
     t = 0.0
     per_layer = list(transfer_bytes_by_layer)[:mc.num_layers]
-    for b in per_layer:
-        t += max(t_layer, fused_transfer_time(hw, b) if b > 0 else 0.0)
+    for i, b in enumerate(per_layer):
+        t_tx = fused_transfer_time(hw, b / n) if b > 0 else 0.0
+        t += max(t_layer, t_tx)
+        if i < len(ag):
+            t += allgather_time(hw, ag[i], n)
     t += t_layer * max(0, mc.num_layers - len(per_layer))
     return t
 

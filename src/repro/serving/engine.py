@@ -69,8 +69,9 @@ from repro.core.device_pool import BucketingPolicy, DevicePoolPlane
 from repro.core.kv_cache import KVCacheManager, KVGeometry, TransferStats
 from repro.core.layer_prefill import (LayerPrefillState, hbm_footprint_tokens,
                                       plan_segments)
-from repro.core.prefill_plane import PrefillPlane
+from repro.core.prefill_plane import PrefillPlane, admit_embed_fns_for
 from repro.core.scheduler import BatchPlan, Scheduler, SchedulerConfig
+from repro.launch.plane_mesh import PlaneMesh
 from repro.models import model as M
 from repro.models.common import ModelConfig
 from repro.serving import costmodel as cm
@@ -131,6 +132,20 @@ class EngineConfig:
                                              # iteration (one fused d2h call
                                              # per layer), keeping DRAM a
                                              # superset of device KV
+    mesh_spec: Any = None                    # context-parallel plane mesh:
+                                             # None (single-device planes),
+                                             # "model=K" / int K (local mesh
+                                             # with a K-way model axis), a
+                                             # jax Mesh, or a PlaneMesh —
+                                             # resolved once per engine via
+                                             # PlaneMesh.resolve.  Shards
+                                             # the staged decode plane's
+                                             # pool slots (KV-head- or
+                                             # block-mode) and the prefill
+                                             # plane's token windows across
+                                             # the model axis; requires
+                                             # decode_plane="staged" and
+                                             # DSA enabled.
     drop_evicted_device_blocks: Optional[bool] = None
     # True: HBM-evicted blocks are physically zeroed on device and restored
     # from the host pool via the fused H2D gather when re-selected.  On the
@@ -181,6 +196,21 @@ class ServingEngine:
         if eng.prefill_exec not in ("plane", "legacy"):
             raise ValueError(f"unknown prefill_exec {eng.prefill_exec!r}; "
                              f"expected 'plane' or 'legacy'")
+        self.plane_mesh = PlaneMesh.resolve(eng.mesh_spec)
+        if self.plane_mesh is not None:
+            if not (eng.batched_decode and eng.decode_plane == "staged"):
+                raise ValueError(
+                    "mesh_spec shards the STAGED decode plane: it requires "
+                    "batched_decode=True and decode_plane='staged'")
+            if not cfg.dsa.enabled:
+                raise ValueError(
+                    "mesh_spec requires DSA (cfg.dsa.enabled): the sharded "
+                    "attend stage has no dense fallback")
+            if eng.attn_impl != "ref":
+                raise ValueError(
+                    "mesh_spec requires attn_impl='ref': the sharded "
+                    "attend stage runs the reference block-sparse "
+                    "attention inside shard_map (no Pallas-kernel path)")
         if eng.prefill_mode == "chunked" and cfg.attention_type == "mla":
             # the chunked baseline carries dense (k, v) context between
             # chunks; MLA's latent cache has no chunked-context path yet
@@ -249,6 +279,7 @@ class ServingEngine:
         self.prefill_planes: Dict[Tuple, PrefillPlane] = {}
         self._req_prefill_plane: Dict[str, PrefillPlane] = {}
         self.prefill_launches = 0                # batched plane launches
+        self.admit_embed_launches = 0            # batched admission embeds
         self._staged_layer_bytes: Dict[int, int] = {}    # model layer ->
                                                          # H2D restore bytes
                                                          # this iteration
@@ -503,12 +534,43 @@ class ServingEngine:
         return tuple((tuple(a.shape[1:]), str(a.dtype))
                      for kv in enc_list for a in kv)
 
-    def _admit_prefill_plane(self, st: _ReqState) -> PrefillPlane:
-        """Embed the prompt once, plan its (layer, chunk) segments, and
-        admit the request into its group's PrefillPlane row."""
+    def _batched_admit_embed(self, sts: List[_ReqState]
+                             ) -> Dict[str, jax.Array]:
+        """{req_id: h (1, S, d)} for an admission batch's pure-text rows,
+        embedded in ONE jitted bucketed launch (admission used to embed
+        eagerly one request at a time).  Requests with frontend tensors
+        (whisper frames, VLM patches) fall back to the per-request
+        ``prefill_embed`` inside ``_admit_prefill_plane``."""
         cfg = self.cfg
-        h, _, enc_kvs = M.prefill_embed(self.params, cfg,
-                                        self._model_inputs(st))
+        text = [st for st in sts
+                if not st.inputs_extra and cfg.frontend == "none"
+                and not cfg.is_encoder_decoder]
+        if not text:
+            return {}
+        pol = self.eng.bucketing
+        n_cap = pol.bucket_batch(len(text))
+        s_cap = pol.bucket_tokens(max(len(st.tokens) for st in text))
+        toks = np.zeros((n_cap, s_cap), np.int32)
+        for i, st in enumerate(text):
+            toks[i, :len(st.tokens)] = st.tokens
+        h_all = admit_embed_fns_for(cfg).embed(self.params,
+                                               jnp.asarray(toks))
+        self.admit_embed_launches += 1
+        return {st.req.req_id: h_all[i:i + 1, :len(st.tokens)]
+                for i, st in enumerate(text)}
+
+    def _admit_prefill_plane(self, st: _ReqState,
+                             h: Optional[jax.Array] = None) -> PrefillPlane:
+        """Plan the request's (layer, chunk) segments and admit it into its
+        group's PrefillPlane row.  ``h``: the admission batch's pre-embedded
+        residual stream (``_batched_admit_embed``); None falls back to the
+        per-request embed (frontend inputs)."""
+        cfg = self.cfg
+        if h is None:
+            h, _, enc_kvs = M.prefill_embed(self.params, cfg,
+                                            self._model_inputs(st))
+        else:
+            enc_kvs = None
         S = int(h.shape[1])                     # prompt (+ patches)
         step = S
         if (self.eng.prefill_max_tokens_per_step > 0
@@ -525,7 +587,7 @@ class ServingEngine:
         plane = self.prefill_planes.get(key)
         if plane is None:
             plane = self.prefill_planes[key] = PrefillPlane(
-                cfg, self.eng.bucketing)
+                cfg, self.eng.bucketing, plane_mesh=self.plane_mesh)
         plane.admit(st.req.req_id, h, segs, enc_list)
         self._req_prefill_plane[st.req.req_id] = plane
         st.decode_state = {"caches": [None] * cfg.num_layers,
@@ -550,6 +612,11 @@ class ServingEngine:
         t = 0.0
         done: List[Request] = []
         fp = 0
+        # batch admission-time embedding: every pure-text request admitted
+        # this iteration shares ONE bucketed embedding launch
+        pre_h = self._batched_admit_embed(
+            [self.states[req.req_id] for req, _ in prefill_reqs
+             if req.req_id not in self._req_prefill_plane])
         by_plane: Dict[int, Tuple[PrefillPlane, Dict[str, int]]] = {}
         for req, inject in prefill_reqs:
             st = self.states[req.req_id]
@@ -557,7 +624,8 @@ class ServingEngine:
                 req.scheduled_time = self.now
             plane = self._req_prefill_plane.get(req.req_id)
             if plane is None:
-                plane = self._admit_prefill_plane(st)
+                plane = self._admit_prefill_plane(st,
+                                                  h=pre_h.get(req.req_id))
             st.prefill_carry += max(int(inject), 1)
             _, allow = by_plane.setdefault(id(plane), (plane, {}))
             allow[req.req_id] = st.prefill_carry
@@ -568,11 +636,22 @@ class ServingEngine:
             def group_cb(g, plane=plane, spent=spent, t_acc=t_acc):
                 # runs in the window right after the group's launch, while
                 # the plane's ONE-layer context still holds this layer
+                n_shards, ag_bytes = 1, 0
+                if (self.plane_mesh is not None and g.kind == "attn"
+                        and self.cfg.attention_type != "mla"):
+                    # sequence-sharded launch: attention compute splits
+                    # across the model axis; the sharded attention outputs
+                    # are re-gathered (charged like one layer of KV)
+                    n_shards = self.plane_mesh.model_size
+                    tok = sum(g.segs[rid].chunk_len for rid in g.req_ids)
+                    ag_bytes = int(tok * self.mc.kv_bytes_per_token
+                                   / max(self.geom.num_layers, 1))
                 t_acc[0] += cm.batched_prefill_time(
                     self.hw, self.mc,
                     [(g.segs[rid].chunk_len,
                       g.chunk_start + g.segs[rid].chunk_len)
-                     for rid in g.req_ids], layers=1)
+                     for rid in g.req_ids], layers=1,
+                    n_shards=n_shards, allgather_bytes=ag_bytes)
                 self.prefill_launches += 1
                 for rid in g.req_ids:
                     spent[rid] = spent.get(rid, 0) + g.segs[rid].chunk_len
@@ -798,7 +877,8 @@ class ServingEngine:
         plane = self.planes.get(key)
         if plane is None:
             plane = self.planes[key] = DevicePoolPlane(
-                self.cfg, self.eng.bucketing, attn_impl=self.eng.attn_impl)
+                self.cfg, self.eng.bucketing, attn_impl=self.eng.attn_impl,
+                plane_mesh=self.plane_mesh)
         for st in sts:
             rid = st.req.req_id
             if rid not in plane.rows:
@@ -1098,12 +1178,27 @@ class ServingEngine:
             if (plan.decode_reqs and self.eng.batched_decode
                     and self.eng.decode_plane == "staged"):
                 # staged pipeline: per layer, H2D restores overlap compute
-                # -> charge max(compute, transfer) per layer, not the sum
+                # -> charge max(compute, transfer) per layer, not the sum.
+                # Sharded plane: each shard restores only its own slots
+                # (per-shard transfer), plus one all-gather of the selected
+                # block ids per attention layer (the host needs GLOBAL ids
+                # for the LRU and the FlashH2D staging).
+                n_shards = (self.plane_mesh.model_size
+                            if self.plane_mesh is not None else 1)
+                ag_bytes = None
+                if n_shards > 1:
+                    sel_bytes = (len(plan.decode_reqs)
+                                 * self.geom.num_kv_heads
+                                 * self.cfg.dsa.top_k_blocks * 4)
+                    ag_bytes = [
+                        sel_bytes if M.layer_kind(self.cfg, l) == "attn"
+                        else 0 for l in range(self.cfg.num_layers)]
                 t_dec = cm.overlapped_decode_time(
                     self.hw, self.mc, max(len(plan.decode_reqs), 1),
                     attended,
                     [self._staged_layer_bytes.get(l, 0)
-                     for l in range(self.cfg.num_layers)])
+                     for l in range(self.cfg.num_layers)],
+                    n_shards=n_shards, allgather_bytes_by_layer=ag_bytes)
                 t_iter = t_dec + t_prefill
             else:
                 t_dec = cm.decode_time(

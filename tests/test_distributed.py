@@ -2,7 +2,10 @@
 
 These spawn SUBPROCESSES with XLA_FLAGS device-count overrides so the main
 test process keeps seeing the single real CPU device (the dryrun.py
-contract).  Marked slow-ish; they compile small multi-device programs.
+contract).  The small-mesh equivalence checks (4 placeholder devices, tiny
+smoke models) are FAST and run per-PR — the CI `multi-device` job selects
+them with ``-m "not slow"`` — while the 512-device dry-run compiles and the
+sharded train step stay ``slow`` (nightly).
 """
 import json
 import os
@@ -11,10 +14,6 @@ import sys
 import textwrap
 
 import pytest
-
-# every test spawns a fresh interpreter and compiles multi-device programs
-# (up to 512 host-platform placeholders) — minutes each on CPU
-pytestmark = pytest.mark.slow
 
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
@@ -49,11 +48,13 @@ def test_moe_expert_parallel_matches_dense():
 
 
 def test_cp_decode_matches_reference():
+    """Fused context-parallel decode (explicit PlaneMesh, ex-CP_AXES
+    global) == single-device reference."""
     out = run_py("""
         import jax, jax.numpy as jnp, numpy as np
         from repro.configs import get_smoke_config
+        from repro.launch.plane_mesh import PlaneMesh
         from repro.models import model as M
-        from repro.models import attention as attn
         cfg = get_smoke_config("qwen2-0.5b")
         params = M.init_params(cfg, jax.random.PRNGKey(0), jnp.float32)
         toks = np.random.default_rng(0).integers(
@@ -64,12 +65,11 @@ def test_cp_decode_matches_reference():
                                    jnp.asarray([5, 9], jnp.int32), state)
         lg_ref2, _ = M.decode_step(params, cfg,
                                    jnp.asarray([3, 2], jnp.int32), st)
-        mesh = jax.make_mesh((2, 2), ("data", "model"))
-        attn.CP_AXES = (("data",), "model"); attn.CP_MESH = mesh
-        lg, st2 = jax.jit(lambda t, s: M.decode_step(params, cfg, t, s))(
-            jnp.asarray([5, 9], jnp.int32), state)
-        lg2, _ = jax.jit(lambda t, s: M.decode_step(params, cfg, t, s))(
-            jnp.asarray([3, 2], jnp.int32), st2)
+        pm = PlaneMesh(mesh=jax.make_mesh((2, 2), ("data", "model")))
+        fn = jax.jit(lambda t, s: M.decode_step(params, cfg, t, s,
+                                                plane_mesh=pm))
+        lg, st2 = fn(jnp.asarray([5, 9], jnp.int32), state)
+        lg2, _ = fn(jnp.asarray([3, 2], jnp.int32), st2)
         ok = (np.allclose(lg_ref, lg, atol=2e-4)
               and np.allclose(lg_ref2, lg2, atol=2e-4))
         print("MATCH" if ok else "MISMATCH")
@@ -77,13 +77,14 @@ def test_cp_decode_matches_reference():
     assert "MATCH" in out
 
 
+@pytest.mark.slow
 def test_cp_mla_decode_matches_reference():
     """MLA (minicpm3): context-parallel latent-pool decode == reference."""
     out = run_py("""
         import jax, jax.numpy as jnp, numpy as np
         from repro.configs import get_smoke_config
+        from repro.launch.plane_mesh import PlaneMesh
         from repro.models import model as M
-        from repro.models import attention as attn
         cfg = get_smoke_config("minicpm3-4b")
         params = M.init_params(cfg, jax.random.PRNGKey(0), jnp.float32)
         toks = np.random.default_rng(0).integers(
@@ -94,12 +95,11 @@ def test_cp_mla_decode_matches_reference():
                                    jnp.asarray([5, 9], jnp.int32), state)
         lg_ref2, _ = M.decode_step(params, cfg,
                                    jnp.asarray([3, 2], jnp.int32), st)
-        mesh = jax.make_mesh((2, 2), ("data", "model"))
-        attn.CP_AXES = (("data",), "model"); attn.CP_MESH = mesh
-        lg, st2 = jax.jit(lambda t, s: M.decode_step(params, cfg, t, s))(
-            jnp.asarray([5, 9], jnp.int32), state)
-        lg2, _ = jax.jit(lambda t, s: M.decode_step(params, cfg, t, s))(
-            jnp.asarray([3, 2], jnp.int32), st2)
+        pm = PlaneMesh(mesh=jax.make_mesh((2, 2), ("data", "model")))
+        fn = jax.jit(lambda t, s: M.decode_step(params, cfg, t, s,
+                                                plane_mesh=pm))
+        lg, st2 = fn(jnp.asarray([5, 9], jnp.int32), state)
+        lg2, _ = fn(jnp.asarray([3, 2], jnp.int32), st2)
         ok = (np.allclose(lg_ref, lg, atol=2e-4)
               and np.allclose(lg_ref2, lg2, atol=2e-4))
         print("MATCH" if ok else "MISMATCH")
@@ -107,6 +107,7 @@ def test_cp_mla_decode_matches_reference():
     assert "MATCH" in out
 
 
+@pytest.mark.slow
 def test_dryrun_lowers_and_compiles_multipod():
     """One real dryrun invocation per mesh proves the 512-device path."""
     out = run_py("""
@@ -123,6 +124,7 @@ def test_dryrun_lowers_and_compiles_multipod():
     assert "DRYRUN_OK" in out
 
 
+@pytest.mark.slow
 def test_dryrun_optimized_variants_lower():
     out = run_py("""
         from repro.launch.dryrun import lower_one
@@ -135,6 +137,7 @@ def test_dryrun_optimized_variants_lower():
     assert "OPT_OK" in out
 
 
+@pytest.mark.slow
 def test_sharded_train_step_runs_on_local_mesh():
     """Real multi-device execution (not just lowering): 4-device train."""
     out = run_py("""

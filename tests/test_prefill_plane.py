@@ -255,6 +255,42 @@ def test_watermark_counts_only_attention_layers(smoke_setup):
     assert kinds_seen == {"attn", "rec"}               # both cases hit
 
 
+def test_admission_embed_batched_one_launch(smoke_setup):
+    """Bugfix: admission-time embedding is BATCHED — every pure-text
+    request admitted in an iteration shares ONE bucketed embed launch
+    (``_AdmitEmbedFns``), and bucketed shapes make admission batch sizes
+    3 and 4 share ONE compiled trace (cache-hit invariant:
+    trace_count == len(shape_signatures))."""
+    from repro.core.prefill_plane import admit_embed_fns_for
+    cfg, params = smoke_setup("qwen2-0.5b")
+    fns = admit_embed_fns_for(cfg)
+    traced = {}
+    for n in (3, 4):
+        c0, t0 = fns.calls, fns.trace_count
+        # inject budget large enough that every request is admitted (and
+        # hence embedded) in the SAME hybrid iteration
+        eng, toks = _run_engine(cfg, params, (48,) * n, gen=2,
+                                max_inject_tokens=4096)
+        assert all(len(t) == 2 for t in toks)
+        # all n admissions happened in one iteration -> ONE embed launch
+        assert eng.admit_embed_launches == 1
+        assert fns.calls - c0 == 1
+        traced[n] = fns.trace_count - t0
+    # 3 and 4 rows bucket to the same (batch, token) shape: the second
+    # admission batch size is a pure compile-cache hit
+    assert traced[4] == 0
+    assert fns.trace_count == len(fns.shape_signatures)
+
+
+def test_admission_embed_fallback_for_frontend_inputs(smoke_setup):
+    """Whisper requests carry frames: they fall back to the per-request
+    embed (encoder KV) and never count a batched admission launch."""
+    cfg, params = smoke_setup("whisper-small")
+    eng, toks = _run_engine(cfg, params, (48, 48), gen=2)
+    assert eng.admit_embed_launches == 0
+    assert all(len(t) == 2 for t in toks)
+
+
 def test_chunked_rec_state_carries_exactly(smoke_setup):
     """Chunked segments over a hybrid arch: the mamba recurrent state (and
     its conv window) carried across same-layer chunks yields the SAME
