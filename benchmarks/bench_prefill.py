@@ -23,7 +23,6 @@ _R = _os.path.dirname(_os.path.dirname(_os.path.abspath(__file__)))
 _sys.path[:0] = [p for p in (_R, _os.path.join(_R, "src"))
                  if p not in _sys.path]
 
-import dataclasses
 
 import jax
 import jax.numpy as jnp

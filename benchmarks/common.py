@@ -13,9 +13,8 @@ same data points as JSON — the CSV lines on stdout stay byte-identical.
 """
 from __future__ import annotations
 
-import sys
 import time
-from typing import Any, Dict, Iterable, List, Optional
+from typing import Any, Dict, List, Optional
 
 _capture: Optional[List[Dict[str, Any]]] = None
 _section: Optional[str] = None

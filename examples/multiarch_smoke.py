@@ -5,7 +5,6 @@ smoke variant — the 10-architecture support matrix in one script.
 """
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.configs import ASSIGNED_ARCHS, get_smoke_config
 from repro.models import model as M

@@ -9,9 +9,6 @@ The config is a width/depth-reduced qwen2 (~100M params with the full
 import argparse
 import dataclasses
 
-import jax
-import jax.numpy as jnp
-
 from repro.configs import get_config
 from repro.data.pipeline import DataConfig
 from repro.models.common import ModelConfig

@@ -114,15 +114,28 @@ class StageFns:
     optional args (enc_kv, ctx, DSA idx) may be None: two calls whose
     leaves coincide but whose structures differ trace separately.
     Donation applies on accelerator backends only (CPU buffers are not
-    donatable and would only emit a warning per compile)."""
+    donatable and would only emit a warning per compile).
+
+    Contract metadata: every registry retains each stage's RAW (unjitted)
+    callable (``raw_fns``) and the abstract shapes of its first call
+    (``abstract_args``, a ShapeDtypeStruct pytree) — what the plane
+    sharding-leak pass (tools/analysis, docs/architecture.md §8) lowers
+    via ``jax.make_jaxpr`` to check collectives and out-spec replication
+    against ``repro.core.plane_contract.sharding_rules``."""
+
+    contract_protocol = "stage-registry"
 
     def __init__(self):
         self.trace_count = 0
         self.calls = 0                      # jitted stage launches, total
         self.shape_signatures: set = set()
+        self.raw_fns: Dict[str, Any] = {}   # stage -> unjitted callable
+        self.abstract_args: Dict[str, Tuple] = {}   # stage -> SDS pytree
         self._donate_ok = jax.default_backend() != "cpu"
 
     def wrap(self, stage, f, donate=()):
+        self.raw_fns[stage] = f
+
         def fn(*args):
             self.trace_count += 1           # trace-time side effect only
             return f(*args)
@@ -136,6 +149,10 @@ class StageFns:
                 (stage, str(treedef),
                  tuple((tuple(jnp.shape(leaf)), str(jnp.result_type(leaf)))
                        for leaf in leaves)))
+            if stage not in self.abstract_args:
+                self.abstract_args[stage] = jax.tree.map(
+                    lambda leaf: jax.ShapeDtypeStruct(
+                        jnp.shape(leaf), jnp.result_type(leaf)), args)
             return jitted(*args)
         return call
 
@@ -207,6 +224,8 @@ class _StagedDecodeFns(StageFns):
     ``trace_count == len(shape_signatures)`` (see ``StageFns``; pool
     buffers are donated so XLA updates them in place on accelerators).
     """
+
+    contract_protocol = "staged-decode"
 
     def __init__(self, cfg, attn_impl: str, plane_mesh=None):
         super().__init__()

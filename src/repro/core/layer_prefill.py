@@ -23,7 +23,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Iterator, List, Optional, Tuple
+from typing import List, Optional
 
 
 @dataclasses.dataclass(frozen=True)

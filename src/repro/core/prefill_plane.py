@@ -60,6 +60,8 @@ class _PrefillFns(StageFns):
     assert (bounded by stage kinds x shape buckets x chunk offsets, never
     the iteration count)."""
 
+    contract_protocol = "prefill-plane"
+
     def __init__(self, cfg, plane_mesh=None):
         super().__init__()
         self.cfg = cfg
@@ -111,6 +113,8 @@ class _AdmitEmbedFns(StageFns):
     to (batch bucket, token bucket), and runs this single stage —
     ``trace_count == len(shape_signatures)`` bounds compiles by the bucket
     grid, independent of how many requests arrive together."""
+
+    contract_protocol = "admit-embed"
 
     def __init__(self, cfg):
         super().__init__()

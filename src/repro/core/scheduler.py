@@ -12,7 +12,7 @@ going from batch 6 to 12).
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Dict, List, Optional, Tuple
+from typing import Dict, List, Optional, Tuple
 
 from repro.core.kv_cache import KVGeometry
 from repro.core.working_set import (DecodeWorkingSet, estimate_decode_ws_bytes,

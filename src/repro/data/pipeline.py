@@ -10,7 +10,7 @@ batch — the same contract a real tokenized-shard loader would satisfy.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Iterator, Optional
+from typing import Dict, Iterator
 
 import numpy as np
 

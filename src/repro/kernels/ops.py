@@ -8,7 +8,6 @@ from __future__ import annotations
 
 import os
 
-import jax
 
 from repro.kernels.block_score import block_score as _block_score
 from repro.kernels.flash_prefill import flash_prefill as _flash_prefill

@@ -6,8 +6,7 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
-from repro.core.dsa import (full_decode_attention_ref, score_blocks,
-                            sparse_decode_attention_ref)
+from repro.core.dsa import score_blocks, sparse_decode_attention_ref
 
 NEG_INF = -1e30
 

@@ -15,7 +15,7 @@ import argparse
 import json
 import sys
 import time
-from typing import Any, Dict, Optional
+from typing import Any, Dict
 
 import jax
 

@@ -165,6 +165,16 @@ class PlaneMesh:
         n = self.model_size
         return -(-nb // n) * n
 
+    def stage_sharding(self, cfg, stage: str):
+        """The plane contract's sharding rules for one stage jit lowered
+        under this mesh: which collectives its jaxpr may contain and which
+        output tree paths may stay sharded (everything else must be pinned
+        via ``replicate``).  This is what the sharding-leak pass of
+        ``tools/analysis`` verifies on the lowered jaxpr."""
+        from repro.core import plane_contract as pc
+        return pc.sharding_rules(stage, pc.stage_shard_mode(stage, cfg,
+                                                            self))
+
     def replicate(self, tree):
         """Pin every leaf to fully-replicated sharding (an all-gather where
         the value was sharded).  Stage functions apply this to everything

@@ -17,13 +17,11 @@ succeeds for every assigned architecture.
 """
 from __future__ import annotations
 
-from typing import Any, Dict, Optional, Sequence, Tuple
+from typing import Any, Dict, Tuple
 
 import jax
-import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from repro.models.common import ModelConfig
 
 # weight-name classes -------------------------------------------------------
 

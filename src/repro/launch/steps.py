@@ -13,7 +13,6 @@ lowers + compiles each (arch, shape, mesh) from these.
 from __future__ import annotations
 
 import dataclasses
-import functools
 from typing import Any, Callable, Dict, Optional, Tuple
 
 import jax

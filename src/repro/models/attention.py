@@ -16,16 +16,13 @@ so per-head block selection touches contiguous memory (§3.2, Fig. 5).
 """
 from __future__ import annotations
 
-import dataclasses
-from typing import Any, Dict, Optional, Tuple
+from typing import Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
 from repro.core import dsa
-from repro.models.common import (DSAConfig, MLAConfig, ModelConfig, apply_rope,
-                                 dense_init, rms_norm, shard_map_compat,
-                                 split_keys)
+from repro.models.common import (DSAConfig, ModelConfig, apply_rope, dense_init, rms_norm, shard_map_compat, split_keys)
 
 NEG_INF = -1e30
 

@@ -18,7 +18,6 @@ DecodeState is a dict pytree:
 """
 from __future__ import annotations
 
-import functools
 from typing import Any, Dict, List, Optional, Tuple
 
 import jax

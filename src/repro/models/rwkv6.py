@@ -11,7 +11,6 @@ hence DSA is *inapplicable* (DESIGN §4) and ``long_500k`` runs natively.
 """
 from __future__ import annotations
 
-import math
 from typing import Dict, Tuple
 
 import jax

@@ -15,7 +15,7 @@ per-device, which is exactly the per-chip link traffic we need).
 from __future__ import annotations
 
 import re
-from typing import Any, Dict, Optional
+from typing import Any, Dict
 
 # TPU v5e hardware constants (per chip)
 PEAK_FLOPS = 197e12          # bf16

@@ -402,6 +402,7 @@ class ServingEngine:
                 if len(kv_out) > 1:
                     v_arr = np.transpose(
                         np.asarray(kv_out[1][0], np.float32), (1, 0, 2))
+                # plane-contract: allow(fused-transfer) legacy per-request executor; the prefill plane owns the fused path
                 host.save_contiguous(lidx, 0,
                                      np.transpose(k_arr, (1, 0, 2)), v_arr)
                 host.flush()
@@ -505,6 +506,7 @@ class ServingEngine:
                         # FlashD2H: the chunked baseline also leaves a DRAM
                         # copy of the prompt KV (one contiguous save per
                         # layer) so decode-time H2D restores stay exact
+                        # plane-contract: allow(fused-transfer) chunked baseline runs one request at a time; nothing to fuse across
                         host.save_contiguous(
                             self._attn_layer_index(l), 0,
                             np.transpose(np.asarray(k[0], np.float32),

@@ -11,7 +11,7 @@ uniformly, Poisson arrivals, prompt lengths capped like the paper
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Optional
+from typing import List
 
 import numpy as np
 

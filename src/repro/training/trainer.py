@@ -9,7 +9,7 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Any, Callable, Dict, Optional, Tuple
+from typing import Any, Callable, Dict, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -17,7 +17,7 @@ import jax.numpy as jnp
 from repro.data.pipeline import DataConfig, TokenStream
 from repro.models import model as M
 from repro.models.common import ModelConfig
-from repro.training.checkpoint import restore_checkpoint, save_checkpoint
+from repro.training.checkpoint import save_checkpoint
 from repro.training.optimizer import (AdamWConfig, adamw_update,
                                       init_opt_state)
 

@@ -1,0 +1,30 @@
+"""Shared runtime plane assertions, backed by the plane contract.
+
+These read the SAME metadata (``repro.core.plane_contract``) the static
+analyzer (tools/analysis) checks, so the launch/trace formulas asserted
+at runtime and the ones proven statically can never drift apart.  Before
+this module each test file hand-rolled its own copies.
+"""
+from repro.core import plane_contract as pc
+
+
+def assert_cache_hit_invariant(fns):
+    """One XLA trace per distinct (stage, shape-signature) bucket — an
+    occupancy change or a repeated bucket must be a pure cache hit."""
+    assert fns.trace_count == len(fns.shape_signatures), (
+        f"trace_count {fns.trace_count} != "
+        f"{len(fns.shape_signatures)} shape signatures: "
+        f"{sorted(fns.shape_signatures)}")
+
+
+def staged_launches_per_iteration(cfg) -> int:
+    """Jitted launches one staged decode iteration issues (the O(L)
+    budget): embed + logits + (select+attend) per attention layer + one
+    per recurrent layer."""
+    return pc.staged_launches_per_iteration(cfg)
+
+
+def staged_stage_kinds(cfg) -> int:
+    """Distinct stage kinds in the staged pipeline — the per-shape-bucket
+    trace budget."""
+    return pc.staged_stage_kinds(cfg)

@@ -3,9 +3,7 @@ cross-attention cache, VLM patch prefix, hybrid recurrent state carry."""
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
-from repro.configs import get_smoke_config
 from repro.models import model as M
 
 

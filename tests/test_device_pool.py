@@ -5,11 +5,12 @@ import dataclasses
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.core.device_pool import (BucketingPolicy, DevicePoolPlane,
                                     gather_row_blocks)
 from repro.models import model as M
+
+import planeasserts as pa
 
 
 def _prefill_state(cfg, params, S, nb, seed=0):
@@ -184,19 +185,18 @@ def test_staged_launches_o_num_layers_traces_bounded(smoke_setup):
                                                  block_bucket=4))
     fns = plane.staged_fns
     assert fns.calls == 0 and fns.trace_count == 0
-    per_iter = 2 + 2 * cfg.num_attention_layers() \
-        + (cfg.num_layers - cfg.num_attention_layers())
+    per_iter = pa.staged_launches_per_iteration(cfg)
     plane.admit("a", _prefill_state(cfg, params, 40, 4))
     for tok in (5, 6, 7):
         plane.step_staged(params, {"a": tok})
     assert fns.calls == 3 * per_iter
-    n_stage_kinds = 4                       # embed, select, attend, logits
+    n_stage_kinds = pa.staged_stage_kinds(cfg)
     assert fns.trace_count == n_stage_kinds          # one bucket so far
     plane.admit("b", _prefill_state(cfg, params, 33, 4, seed=1))
     plane.step_staged(params, {"a": 5, "b": 6})
     plane.step_staged(params, {"b": 6})     # occupancy change: no retrace
     assert fns.trace_count == 2 * n_stage_kinds      # b_cap=2 bucket
-    assert fns.trace_count == len(fns.shape_signatures)
+    pa.assert_cache_hit_invariant(fns)
     assert fns.calls == 5 * per_iter                 # 5 steps total
 
 
@@ -223,6 +223,6 @@ def test_jit_retraces_bounded_by_buckets(smoke_setup):
     plane.admit("c", _prefill_state(cfg, params, 48, 4, seed=2))
     plane.step(params, {"b": 5, "c": 6})           # same buckets: cache hit
     assert fn.trace_count == 2
-    assert fn.trace_count == len(fn.shape_signatures)
+    pa.assert_cache_hit_invariant(fn)
     n_buckets = len({1, 2}) * 1                    # batch buckets x nb buckets
     assert fn.trace_count <= n_buckets

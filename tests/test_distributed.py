@@ -7,7 +7,6 @@ smoke models) are FAST and run per-PR — the CI `multi-device` job selects
 them with ``-m "not slow"`` — while the 512-device dry-run compiles and the
 sharded train step stay ``slow`` (nightly).
 """
-import json
 import os
 import subprocess
 import sys

@@ -1,6 +1,5 @@
 """DSA property tests (hypothesis): metadata soundness, selection
 invariants, and the sparse≈full attention guarantee under full budget."""
-import dataclasses
 
 import jax
 import jax.numpy as jnp

@@ -1,5 +1,4 @@
 """Real-execution serving engine integration tests."""
-import dataclasses
 
 import jax
 import jax.numpy as jnp

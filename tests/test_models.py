@@ -6,8 +6,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.configs import ALL_ARCHS, ASSIGNED_ARCHS, get_config, \
-    get_smoke_config
+from repro.configs import ASSIGNED_ARCHS, get_config, get_smoke_config
 from repro.models import model as M
 from conftest import make_batch
 

@@ -24,6 +24,8 @@ from repro.models import model as M
 from repro.serving.engine import EngineConfig, ServingEngine
 from repro.serving.request import Request
 
+import planeasserts as pa
+
 N_DEV = len(jax.devices())
 needs_multi = pytest.mark.skipif(
     N_DEV < 8, reason="needs 8 forced host devices (CI multi-device job: "
@@ -108,8 +110,7 @@ def test_sharded_code_path_on_one_device(smoke_setup):
     assert e1.plane_mesh is not None and e1.plane_mesh.model_size == 1
     [plane] = e1.planes.values()
     assert plane.plane_mesh is e1.plane_mesh
-    fns = plane.staged_fns
-    assert fns.trace_count == len(fns.shape_signatures)
+    pa.assert_cache_hit_invariant(plane.staged_fns)
 
 
 # ---------------------------------------------------------------------------
@@ -150,10 +151,8 @@ def test_sharded_staged_launches_o_num_layers_traces_bounded(sharded_runs):
     cfg = e.cfg
     [plane] = e.planes.values()
     fns = plane.staged_fns
-    assert fns.trace_count == len(fns.shape_signatures)
-    n_attn = cfg.num_attention_layers()
-    n_rec = cfg.num_layers - n_attn
-    per_iter = 2 + 2 * n_attn + n_rec            # embed+logits+stages
+    pa.assert_cache_hit_invariant(fns)
+    per_iter = pa.staged_launches_per_iteration(cfg)
     assert fns.calls == per_iter * e.decode_step_calls
     # pool block capacity divides the 8-way model axis (block mode)
     assert plane.nb_cap % 8 == 0
@@ -212,7 +211,7 @@ def test_sharded_prefill_plane_matches_plane_and_legacy(smoke_setup):
                                 e_p.prefill_planes.values()):
         assert plane_c.launches == plane_p.launches
         assert plane_c.chunk_launches == plane_p.chunk_launches > 0
-        assert plane_c.fns.trace_count == len(plane_c.fns.shape_signatures)
+        pa.assert_cache_hit_invariant(plane_c.fns)
 
 
 @needs_multi
@@ -258,8 +257,7 @@ def test_jamba_hybrid_sharded_smoke(smoke_setup):
     assert t2 == t0
     [plane] = e2.planes.values()
     assert plane.staged_fns is staged_fns_for(cfg, "ref", pm)
-    assert plane.staged_fns.trace_count == \
-        len(plane.staged_fns.shape_signatures)
+    pa.assert_cache_hit_invariant(plane.staged_fns)
 
 
 # ---------------------------------------------------------------------------

@@ -3,7 +3,6 @@ with the legacy per-request layer-segmented executor AND the chunked-prefill
 baseline, chunked-segment execution (the (layer, chunk) steps plan_segments
 emits are now honored — the former dead code), launch/trace bounds, fused
 FlashD2H accounting, slot reuse, and the batched prefill HBM watermark."""
-import dataclasses
 
 import numpy as np
 import pytest
@@ -11,6 +10,8 @@ import pytest
 from repro.core.layer_prefill import plan_segments
 from repro.serving.engine import EngineConfig, ServingEngine
 from repro.serving.request import Phase, Request
+
+import planeasserts as pa
 
 
 def _run_engine(cfg, params, prompts, gen=4, seed=7, enc_lens=None, **kw):
@@ -128,7 +129,7 @@ def test_plane_retraces_bounded_by_shape_signatures(gqa_runs):
         e, _ = gqa_runs[key]
         for plane in e.prefill_planes.values():
             fns = plane.fns
-            assert fns.trace_count == len(fns.shape_signatures)
+            pa.assert_cache_hit_invariant(fns)
             pol = e.eng.bucketing
             assert plane.buckets_seen
             for b_cap, t_cap in plane.buckets_seen:
@@ -192,7 +193,7 @@ def test_plane_equivalence_across_arch_families(arch, step, smoke_setup):
         assert sum(p.chunk_launches
                    for p in e_c.prefill_planes.values()) == 0
     for p in e_p.prefill_planes.values():
-        assert p.fns.trace_count == len(p.fns.shape_signatures)
+        pa.assert_cache_hit_invariant(p.fns)
 
 
 def test_whisper_groups_by_encoder_length(smoke_setup):
@@ -279,7 +280,7 @@ def test_admission_embed_batched_one_launch(smoke_setup):
     # 3 and 4 rows bucket to the same (batch, token) shape: the second
     # admission batch size is a pure compile-cache hit
     assert traced[4] == 0
-    assert fns.trace_count == len(fns.shape_signatures)
+    pa.assert_cache_hit_invariant(fns)
 
 
 def test_admission_embed_fallback_for_frontend_inputs(smoke_setup):

@@ -2,13 +2,11 @@
 AbstractMesh supplies axis names/sizes)."""
 import jax
 import jax.numpy as jnp
-import numpy as np
 import pytest
 from jax.sharding import PartitionSpec as P
 
 from conftest import make_abstract_mesh
-from repro.roofline.analysis import (_shape_bytes, _type_bytes,
-                                     collective_bytes_from_hlo, model_flops)
+from repro.roofline.analysis import (_shape_bytes, collective_bytes_from_hlo, model_flops)
 
 
 # ---------------------------------------------------------------------------
@@ -167,7 +165,7 @@ def test_batch_sharding_multipod(pod_mesh):
 
 
 def test_input_specs_cover_all_shapes():
-    from repro.launch.steps import SHAPES, input_specs, step_and_specs
+    from repro.launch.steps import SHAPES, step_and_specs
     from repro.configs import ASSIGNED_ARCHS, get_config
     for arch in ASSIGNED_ARCHS:
         cfg = get_config(arch)

@@ -1,5 +1,4 @@
 """Training substrate + data pipeline tests."""
-import os
 
 import jax
 import jax.numpy as jnp

@@ -1,0 +1,1 @@
+"""Plane-contract static analyzer (see tools/analysis/README.md)."""

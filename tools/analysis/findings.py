@@ -1,0 +1,70 @@
+"""Finding model + waiver application + report rendering for the
+plane-contract analyzer."""
+from __future__ import annotations
+
+import dataclasses
+import json
+from pathlib import Path
+from typing import Dict, List, Tuple
+
+from repro.core import plane_contract as pc
+
+
+@dataclasses.dataclass
+class Finding:
+    rule: str
+    file: str                       # repo-relative path
+    line: int
+    message: str
+    check: str                      # "stage-protocol" | "retrace" | "sharding"
+    waived: bool = False
+    waive_reason: str = ""
+
+    def to_dict(self) -> Dict:
+        return dataclasses.asdict(self)
+
+    def render(self) -> str:
+        tag = f" [waived: {self.waive_reason}]" if self.waived else ""
+        return (f"{self.file}:{self.line}: {self.rule} ({self.check}): "
+                f"{self.message}{tag}")
+
+
+def apply_waivers(findings: List[Finding], repo_root: Path) -> None:
+    """Mark findings covered by an in-source
+    ``# plane-contract: allow(<rule>) <reason>`` comment (same line or the
+    line above) as waived."""
+    cache: Dict[str, Dict[int, Tuple[str, str]]] = {}
+    for f in findings:
+        if f.file not in cache:
+            path = repo_root / f.file
+            try:
+                cache[f.file] = pc.collect_waivers(
+                    path.read_text(encoding="utf-8"))
+            except OSError:
+                cache[f.file] = {}
+        reason = pc.waiver_for(cache[f.file], f.rule, f.line)
+        if reason is not None:
+            f.waived = True
+            f.waive_reason = reason
+
+
+def render_report(findings: List[Finding], checks: List[str]) -> str:
+    lines = []
+    unwaived = [f for f in findings if not f.waived]
+    for f in findings:
+        lines.append(f.render())
+    lines.append(f"plane-contract: checks={','.join(checks)} "
+                 f"findings={len(findings)} unwaived={len(unwaived)}")
+    return "\n".join(lines)
+
+
+def json_report(findings: List[Finding], checks: List[str],
+                target: str) -> str:
+    unwaived = [f for f in findings if not f.waived]
+    return json.dumps({
+        "target": target,
+        "checks": checks,
+        "findings": [f.to_dict() for f in findings],
+        "counts": {"total": len(findings), "unwaived": len(unwaived)},
+        "ok": not unwaived,
+    }, indent=2)

@@ -1,0 +1,116 @@
+"""Seeded-violation fixtures for the plane-contract analyzer.
+
+Each fixture is a minimal mini-plane carrying EXACTLY ONE violation of one
+rule (plus ``clean_mini``, which exercises all three passes and must come
+back empty).  ``FIXTURES`` maps name -> (AnalysisTarget, expected rule);
+``tests/test_plane_analysis.py`` asserts each target yields findings of
+precisely its expected rule, and the CLI exposes them via ``--fixture``.
+
+The AST-pass fixtures (drivers, jit bodies, registries) are analyzed as
+SOURCE only and never imported; only the ``build_stages`` sharding
+fixtures execute (abstract lowering on a 1-device mesh).
+"""
+from __future__ import annotations
+
+from repro.core import plane_contract as pc
+
+_FX = "tools/analysis/fixtures"
+
+
+def _driver_target(name, fname, qualname, protocol, callbacks=(),
+                   batch=()) -> pc.AnalysisTarget:
+    return pc.AnalysisTarget(
+        name=name,
+        drivers=(pc.DriverSpec(
+            name=name, file=f"{_FX}/{fname}", qualname=qualname,
+            protocol=protocol, callbacks=callbacks,
+            batch_iterables=batch),))
+
+
+def _jit_target(name, fname) -> pc.AnalysisTarget:
+    return pc.AnalysisTarget(name=name, jit_files=(f"{_FX}/{fname}",))
+
+
+def _registry_target(name, fname, factory, required,
+                     wrap_required) -> pc.AnalysisTarget:
+    return pc.AnalysisTarget(
+        name=name,
+        registries=(pc.RegistrySpec(f"{_FX}/{fname}", factory, required,
+                                    wrap_required),))
+
+
+def _sharding_target(name, fname) -> pc.AnalysisTarget:
+    return pc.AnalysisTarget(name=name,
+                             sharding=f"{_FX}/{fname}:build_stages")
+
+
+FIXTURES = {
+    # pass 1 — stage protocol
+    "bad_reordered_restore": (
+        _driver_target("bad_reordered_restore",
+                       "bad_reordered_restore.py", "BadPlane.step",
+                       "staged-decode"),
+        pc.RULE_RESTORE_BEFORE_USE),
+    "bad_drop_before_writeback": (
+        _driver_target("bad_drop_before_writeback",
+                       "bad_drop_before_writeback.py", "BadPlane.step",
+                       "staged-decode"),
+        pc.RULE_WRITEBACK_BEFORE_DROP),
+    "bad_double_d2h": (
+        _driver_target("bad_double_d2h", "bad_double_d2h.py",
+                       "BadPlane.step", "staged-decode"),
+        pc.RULE_FUSED_TRANSFER),
+    "bad_ctx_after_window": (
+        _driver_target("bad_ctx_after_window", "bad_ctx_after_window.py",
+                       "BadPrefill.run_iteration", "prefill-plane",
+                       callbacks=(pc.CallbackSpec(
+                           "group_cb", f"{_FX}/bad_ctx_after_window.py",
+                           "good_group_cb"),)),
+        pc.RULE_CTX_LIFETIME),
+    "bad_per_request_launch": (
+        _driver_target("bad_per_request_launch",
+                       "bad_per_request_launch.py", "BadGroup.run_group",
+                       "prefill-group", batch=("rids",)),
+        pc.RULE_LAUNCHES),
+    # pass 2 — retrace hazards
+    "bad_traced_branch": (
+        _jit_target("bad_traced_branch", "bad_traced_branch.py"),
+        pc.RULE_TRACED_BRANCH),
+    "bad_tracer_coercion": (
+        _jit_target("bad_tracer_coercion", "bad_tracer_coercion.py"),
+        pc.RULE_TRACER_COERCION),
+    "bad_np_in_jit": (
+        _jit_target("bad_np_in_jit", "bad_np_in_jit.py"),
+        pc.RULE_NP_IN_JIT),
+    "bad_unhashable_key": (
+        _registry_target("bad_unhashable_key", "bad_unhashable_key.py",
+                         "fns_for", ("cfg", "plane_mesh"),
+                         ("cfg", "plane_mesh")),
+        pc.RULE_UNHASHABLE_KEY),
+    "bad_key_missing_field": (
+        _registry_target("bad_key_missing_field",
+                         "bad_key_missing_field.py", "fns_for",
+                         ("cfg", "attn_impl"), ("cfg",)),
+        pc.RULE_KEY_MISSING_FIELD),
+    # pass 3 — sharding
+    "bad_collective": (
+        _sharding_target("bad_collective", "bad_collective.py"),
+        pc.RULE_COLLECTIVE),
+    "bad_sharding_leak": (
+        _sharding_target("bad_sharding_leak", "bad_sharding_leak.py"),
+        pc.RULE_SHARDING_LEAK),
+    # all three passes, zero findings
+    "clean_mini": (
+        pc.AnalysisTarget(
+            name="clean_mini",
+            drivers=(pc.DriverSpec(
+                name="clean_mini", file=f"{_FX}/clean_mini.py",
+                qualname="GoodPlane.step", protocol="staged-decode",
+                batch_iterables=("token_by_req",)),),
+            registries=(pc.RegistrySpec(
+                f"{_FX}/clean_mini.py", "fns_for",
+                ("cfg", "plane_mesh"), ("cfg", "plane_mesh")),),
+            jit_files=(f"{_FX}/clean_mini.py",),
+            sharding=f"{_FX}/clean_mini.py:build_stages"),
+        None),
+}

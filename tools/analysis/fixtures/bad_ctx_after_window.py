@@ -1,0 +1,22 @@
+"""Seeded violation: the one-layer prefill ctx buffer is read OUTSIDE the
+group callback, after the next group may have overwritten it —
+ctx-lifetime.  The callback itself is well-formed (ctx read, fused D2H,
+then the HBM layer evict).  Analyzed as source only; never imported."""
+
+
+def good_group_cb(g, plane, host, cache):
+    k, v = plane.read_group_kv(g)
+    host.save_new_tokens_fused(g, k, v)
+    cache.drop_layer(g)
+
+
+class BadPrefill:
+    def run_iteration(self, params, group_cb):
+        while True:
+            g = self._run_group(params)
+            if g is None:
+                break
+            group_cb(g)
+            stale = self.plane.read_group_kv(g)     # ctx already recycled
+            self.keep.append(stale)
+        return self.fns.finalize(params)

@@ -1,0 +1,16 @@
+"""Seeded violation: two FlashD2H saves in one (layer, group) window —
+fused-transfer requires exactly one fused launch per window.  Analyzed as
+source only; never imported."""
+
+
+class BadPlane:
+    def step(self, params, fns, host):
+        x = fns.embed(params, None)
+        for i in range(4):
+            sel = fns.select(params, x)
+            host.save_new_tokens_fused(i, sel)
+            host.save_new_tokens_fused(i, sel)      # second save, same window
+            host.load_blocks_fused(i, sel)
+            host.restore_blocks_fused(i, sel)
+            x = fns.attend(params, x, sel)
+        return fns.logits(params, x)

@@ -1,0 +1,16 @@
+"""Seeded violation: blocks are physically dropped before any FlashD2H
+write-back exists — writeback-before-drop.  Analyzed as source only;
+never imported."""
+
+
+class BadPlane:
+    def step(self, params, fns, host):
+        x = fns.embed(params, None)
+        for i in range(4):
+            sel = fns.select(params, x)
+            host.drop_blocks(i, sel, protect=(i, sel))   # nothing saved yet
+            host.save_new_tokens_fused(i, sel)
+            host.load_blocks_fused(i, sel)
+            host.restore_blocks_fused(i, sel)
+            x = fns.attend(params, x, sel)
+        return fns.logits(params, x)

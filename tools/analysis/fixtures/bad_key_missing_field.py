@@ -1,0 +1,13 @@
+"""Seeded violation: the registry cache key omits a shape-relevant factory
+parameter — key-missing-field (a stage jit compiled for one attn_impl
+would be served for every other one).  Analyzed as source only; never
+imported."""
+
+_REG = {}
+
+
+def fns_for(cfg, attn_impl):
+    key = (repr(cfg),)                  # attn_impl never reaches the key
+    if key not in _REG:
+        _REG[key] = object()
+    return _REG[key]

@@ -1,0 +1,10 @@
+"""Seeded violation: a numpy call on a traced value inside a jitted stage
+body — np-in-jit (numpy either raises on tracers or constant-folds a
+stale value into the jaxpr; use jnp).  Analyzed as source only; never
+imported."""
+import numpy as np
+
+
+def build(wrap):
+    return wrap("logits",
+                lambda p, x: np.maximum(x, 0.0) + p["b"])

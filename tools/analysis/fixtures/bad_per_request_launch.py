@@ -1,0 +1,11 @@
+"""Seeded violation: a jitted stage launch inside a loop over requests —
+launches-per-iteration (the O(L) budget becomes O(L * batch)).  Analyzed
+as source only; never imported."""
+
+
+class BadGroup:
+    def run_group(self, params, rids):
+        outs = []
+        for rid in rids:
+            outs.append(self.fns.attn(params, rid))     # per-request launch
+        return outs

@@ -1,0 +1,15 @@
+"""Seeded violation: the fused restore lands AFTER the attend launch that
+needs those blocks resident — restore-before-use.  Analyzed as source
+only; never imported."""
+
+
+class BadPlane:
+    def step(self, params, fns, host):
+        x = fns.embed(params, None)
+        for i in range(4):
+            sel = fns.select(params, x)
+            host.save_new_tokens_fused(i, sel)
+            host.load_blocks_fused(i, sel)
+            x = fns.attend(params, x, sel)
+            host.restore_blocks_fused(i, sel)       # too late
+        return fns.logits(params, x)

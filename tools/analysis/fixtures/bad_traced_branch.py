@@ -1,0 +1,8 @@
+"""Seeded violation: a Python branch on a traced value inside a jitted
+stage body — traced-branch (the branch is resolved at trace time and
+baked into the jaxpr).  Analyzed as source only; never imported."""
+
+
+def build(wrap):
+    return wrap("select",
+                lambda p, x, mask: p["w"] @ x if mask else x)

@@ -1,0 +1,8 @@
+"""Seeded violation: int() applied to a traced value inside a jitted
+stage body — tracer-coercion (ConcretizationTypeError, or a silent host
+sync under jit-of-concrete).  Analyzed as source only; never imported."""
+
+
+def build(wrap):
+    return wrap("attend",
+                lambda p, x, n: p["w"][:int(n)] @ x)

@@ -1,0 +1,14 @@
+"""Seeded violation: the config object sits BARE in a registry cache key
+— unhashable-key (dataclass configs with array-valued fields are not
+reliably hashable, and identity-keyed entries leak one compile cache per
+engine; key repr(cfg) instead).  Analyzed as source only; never
+imported."""
+
+_REG = {}
+
+
+def fns_for(cfg, plane_mesh):
+    key = (cfg, None if plane_mesh is None else plane_mesh.key())
+    if key not in _REG:
+        _REG[key] = object()
+    return _REG[key]

@@ -1,0 +1,260 @@
+"""Pass 2 — retrace-hazard lint.
+
+Finds the jitted stage bodies in the plane modules (the function argument
+of ``StageFns.wrap(stage, fn)`` / ``self.wrap(...)`` call sites, plus
+direct ``jax.jit`` call sites and decorators) and lints each body for the
+hazards that silently retrace or break under tracing:
+
+* traced-branch    — Python ``if``/``while``/ternary branching on a traced
+                     argument (``is None`` / ``isinstance`` tests are
+                     static and allowed);
+* tracer-coercion  — ``int()``/``float()``/``bool()``/``.item()`` applied
+                     to a traced value (ConcretizationTypeError at trace
+                     time, or a silent host sync);
+* np-in-jit        — ``np.*`` calls on traced values inside a jit body
+                     (constant-folds the tracer or raises; use ``jnp``).
+
+Separately lints the stage-fns REGISTRY factories against their
+``plane_contract.RegistrySpec``:
+
+* unhashable-key      — a non-hashable config/mesh object placed directly
+                        in a registry key tuple (must go through
+                        ``repr()`` / ``.key()``);
+* key-missing-field   — a shape-relevant factory parameter that never
+                        reaches the key (stale fns served across configs).
+
+Parameters with defaults (e.g. ``kind=kind`` closure pinning) and the
+conventional static names (``self``/``cfg``/``kind``/``stage``) are
+treated as static; everything else arriving at a jit body is traced.
+Purely syntactic: nothing is imported or executed.
+"""
+from __future__ import annotations
+
+import ast
+from pathlib import Path
+from typing import Dict, List, Optional, Set, Tuple
+
+from repro.core import plane_contract as pc
+
+from .findings import Finding
+
+_NP_ROOTS = ("np", "numpy")
+_COERCIONS = ("int", "float", "bool")
+
+
+def _parse(repo_root: Path, file: str) -> ast.Module:
+    return ast.parse((repo_root / file).read_text(encoding="utf-8"),
+                     filename=file)
+
+
+def _params(fn) -> Tuple[List[str], Set[str]]:
+    """(all param names, static param names) for a def/lambda."""
+    a = fn.args
+    names = [p.arg for p in a.posonlyargs + a.args + a.kwonlyargs]
+    static = set(pc.STATIC_PARAM_NAMES) & set(names)
+    # positional defaults align with the TAIL of posonlyargs+args
+    pos = [p.arg for p in a.posonlyargs + a.args]
+    for i, _ in enumerate(a.defaults):
+        static.add(pos[len(pos) - len(a.defaults) + i])
+    for p, d in zip(a.kwonlyargs, a.kw_defaults):
+        if d is not None:
+            static.add(p.arg)
+    return names, static
+
+
+def _names_in(node: ast.AST) -> Set[str]:
+    return {n.id for n in ast.walk(node) if isinstance(n, ast.Name)}
+
+
+def _is_static_test(test: ast.AST) -> bool:
+    """Tests that resolve at trace time: ``x is None`` / ``x is not None``
+    and ``isinstance(...)``."""
+    if isinstance(test, ast.Compare):
+        ok_ops = all(isinstance(op, (ast.Is, ast.IsNot)) for op in test.ops)
+        none_cmp = any(isinstance(c, ast.Constant) and c.value is None
+                       for c in [test.left] + list(test.comparators))
+        return ok_ops and none_cmp
+    if (isinstance(test, ast.Call) and isinstance(test.func, ast.Name)
+            and test.func.id in ("isinstance", "hasattr", "callable")):
+        return True
+    if isinstance(test, ast.BoolOp):
+        return all(_is_static_test(v) for v in test.values)
+    if isinstance(test, ast.UnaryOp) and isinstance(test.op, ast.Not):
+        return _is_static_test(test.operand)
+    return False
+
+
+def _np_root(node: ast.AST) -> Optional[str]:
+    """'np' for calls rooted at the numpy module alias, else None."""
+    while isinstance(node, ast.Attribute):
+        node = node.value
+    if isinstance(node, ast.Name) and node.id in _NP_ROOTS:
+        return node.id
+    return None
+
+
+class _JitBodyLint:
+    def __init__(self, file: str, stage: str, fn, findings: List[Finding]):
+        self.file = file
+        self.stage = stage
+        self.findings = findings
+        names, static = _params(fn)
+        self.traced = {n for n in names if n not in static}
+        if isinstance(fn, ast.Lambda):
+            self._walk(fn.body)
+        else:
+            for stmt in fn.body:
+                self._walk(stmt)
+
+    def _flag(self, rule: str, node: ast.AST, msg: str) -> None:
+        self.findings.append(Finding(
+            rule=rule, file=self.file, line=node.lineno,
+            message=f"[jit:{self.stage}] {msg}", check="retrace"))
+
+    def _touches_traced(self, node: ast.AST) -> bool:
+        return bool(_names_in(node) & self.traced)
+
+    def _walk(self, node: ast.AST) -> None:
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef,
+                             ast.Lambda)):
+            return                  # nested defs have their own params
+        if isinstance(node, (ast.If, ast.While)):
+            self._check_test(node.test)
+        if isinstance(node, ast.IfExp):
+            self._check_test(node.test)
+        if isinstance(node, ast.Call):
+            self._check_call(node)
+        for child in ast.iter_child_nodes(node):
+            self._walk(child)
+
+    def _check_test(self, test: ast.AST) -> None:
+        if self._touches_traced(test) and not _is_static_test(test):
+            self._flag(pc.RULE_TRACED_BRANCH, test,
+                       "Python branch on a traced value — the branch is "
+                       "taken at TRACE time and baked into the jaxpr "
+                       "(use jnp.where / lax.cond)")
+
+    def _check_call(self, call: ast.Call) -> None:
+        f = call.func
+        if (isinstance(f, ast.Name) and f.id in _COERCIONS
+                and any(self._touches_traced(a) for a in call.args)):
+            self._flag(pc.RULE_TRACER_COERCION, call,
+                       f"{f.id}() on a traced value — concretizes the "
+                       f"tracer (ConcretizationTypeError or a hidden "
+                       f"device sync)")
+        if (isinstance(f, ast.Attribute) and f.attr == "item"
+                and self._touches_traced(f.value)):
+            self._flag(pc.RULE_TRACER_COERCION, call,
+                       ".item() on a traced value inside a jit body")
+        if isinstance(f, ast.Attribute) and _np_root(f) \
+                and self._touches_traced(call):
+            self._flag(pc.RULE_NP_IN_JIT, call,
+                       f"np.{f.attr}() on a traced value inside a jit "
+                       f"body — numpy constant-folds tracers or raises; "
+                       f"use jnp")
+
+
+def _iter_jit_bodies(tree: ast.Module):
+    """Yield (stage_label, fn_node) for every jit body in a module: wrap()
+    call sites (arg 1), jax.jit call sites (arg 0), jax.jit decorators."""
+    defs: Dict[str, ast.AST] = {}
+    for node in ast.walk(tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            defs.setdefault(node.name, node)
+    seen = set()
+
+    def _resolve(arg):
+        if isinstance(arg, ast.Lambda):
+            return arg
+        if isinstance(arg, ast.Name):
+            return defs.get(arg.id)
+        return None
+
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Call):
+            f = node.func
+            is_wrap = ((isinstance(f, ast.Attribute) and f.attr == "wrap")
+                       or (isinstance(f, ast.Name) and f.id == "wrap"))
+            if is_wrap and len(node.args) >= 2:
+                stage = (node.args[0].value
+                         if isinstance(node.args[0], ast.Constant)
+                         else "?")
+                fn = _resolve(node.args[1])
+                if fn is not None and id(fn) not in seen:
+                    seen.add(id(fn))
+                    yield str(stage), fn
+            elif (isinstance(f, ast.Attribute) and f.attr == "jit"
+                  and isinstance(f.value, ast.Name)
+                  and f.value.id == "jax" and node.args):
+                fn = _resolve(node.args[0])
+                if fn is not None and id(fn) not in seen:
+                    seen.add(id(fn))
+                    yield getattr(fn, "name", "<lambda>"), fn
+        elif isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            for dec in node.decorator_list:
+                d = dec.func if isinstance(dec, ast.Call) else dec
+                if isinstance(d, ast.Attribute) and d.attr == "jit":
+                    if id(node) not in seen:
+                        seen.add(id(node))
+                        yield node.name, node
+
+
+def _check_registry(repo_root: Path, spec: pc.RegistrySpec,
+                    tree: ast.Module) -> List[Finding]:
+    out: List[Finding] = []
+    fn = None
+    for node in ast.walk(tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)) \
+                and node.name == spec.factory:
+            fn = node
+            break
+    if fn is None:
+        return out
+    key_exprs = [stmt.value for stmt in ast.walk(fn)
+                 if isinstance(stmt, ast.Assign)
+                 and any(isinstance(t, ast.Name) and t.id == "key"
+                         for t in stmt.targets)]
+    if not key_exprs:
+        out.append(Finding(
+            rule=pc.RULE_KEY_MISSING_FIELD, file=spec.file, line=fn.lineno,
+            message=f"registry factory {spec.factory} has no `key = ...` "
+                    f"assignment to check", check="retrace"))
+        return out
+    for key in key_exprs:
+        names = _names_in(key)
+        for p in spec.required_params:
+            if p not in names:
+                out.append(Finding(
+                    rule=pc.RULE_KEY_MISSING_FIELD, file=spec.file,
+                    line=key.lineno,
+                    message=f"registry key of {spec.factory} omits "
+                            f"shape-relevant parameter {p!r} — a cached "
+                            f"stage jit would be served across different "
+                            f"{p} values", check="retrace"))
+        if isinstance(key, ast.Tuple):
+            for elt in key.elts:
+                if isinstance(elt, ast.Name) \
+                        and elt.id in spec.wrap_required:
+                    out.append(Finding(
+                        rule=pc.RULE_UNHASHABLE_KEY, file=spec.file,
+                        line=elt.lineno,
+                        message=f"bare {elt.id!r} in the registry key of "
+                                f"{spec.factory} — not hashable / not "
+                                f"value-stable; wrap it (repr(cfg), "
+                                f"plane_mesh.key())", check="retrace"))
+    return out
+
+
+def run(repo_root: Path, target: pc.AnalysisTarget) -> List[Finding]:
+    findings: List[Finding] = []
+    for file in target.jit_files:
+        tree = _parse(repo_root, file)
+        for stage, fn in _iter_jit_bodies(tree):
+            _JitBodyLint(file, stage, fn, findings)
+    reg_trees: Dict[str, ast.Module] = {}
+    for spec in target.registries:
+        if spec.file not in reg_trees:
+            reg_trees[spec.file] = _parse(repo_root, spec.file)
+        findings.extend(_check_registry(repo_root, spec,
+                                        reg_trees[spec.file]))
+    return findings

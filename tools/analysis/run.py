@@ -1,0 +1,101 @@
+#!/usr/bin/env python
+"""Plane-contract analyzer CLI.
+
+    python tools/analysis/run.py                       # all passes, real tree
+    python tools/analysis/run.py --check retrace       # one pass
+    python tools/analysis/run.py --json report.json    # machine-readable
+    python tools/analysis/run.py --fixture bad_double_d2h
+    python tools/analysis/run.py --list-fixtures
+
+Exit status is non-zero iff any finding is NOT covered by an in-source
+``# plane-contract: allow(<rule>) <reason>`` waiver.  See
+tools/analysis/README.md and docs/architecture.md §8.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+from pathlib import Path
+
+REPO_ROOT = Path(__file__).resolve().parents[2]
+for p in (str(REPO_ROOT), str(REPO_ROOT / "src")):
+    if p not in sys.path:
+        sys.path.insert(0, p)
+
+from repro.core import plane_contract as pc               # noqa: E402
+from tools.analysis import (                              # noqa: E402
+    findings as findings_mod,
+    retrace_lint,
+    sharding_leak,
+    stage_protocol,
+)
+
+CHECKS = ("stage-protocol", "retrace", "sharding")
+
+
+def analyze(target: pc.AnalysisTarget, checks=CHECKS, repo_root=REPO_ROOT,
+            get_setup=None):
+    """Run the selected passes over one target; returns findings with
+    waivers applied."""
+    found = []
+    if "stage-protocol" in checks:
+        found.extend(stage_protocol.run(repo_root, target))
+    if "retrace" in checks:
+        found.extend(retrace_lint.run(repo_root, target))
+    if "sharding" in checks:
+        found.extend(sharding_leak.run(repo_root, target,
+                                       get_setup=get_setup))
+    findings_mod.apply_waivers(found, repo_root)
+    return found
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="tools/analysis/run.py",
+        description="Static analyzer for the serving-plane contract.")
+    ap.add_argument("--check", action="append", default=None,
+                    help=f"pass(es) to run, comma-separable; default all "
+                         f"({','.join(CHECKS)})")
+    ap.add_argument("--json", nargs="?", const="-", default=None,
+                    metavar="PATH",
+                    help="emit a JSON report to PATH (or stdout)")
+    ap.add_argument("--fixture", default=None,
+                    help="analyze a seeded-violation fixture instead of "
+                         "the real tree")
+    ap.add_argument("--list-fixtures", action="store_true")
+    args = ap.parse_args(argv)
+
+    from tools.analysis.fixtures import FIXTURES
+    if args.list_fixtures:
+        for name, (_, rule) in sorted(FIXTURES.items()):
+            print(f"{name}: expects {rule or 'no findings'}")
+        return 0
+
+    checks = list(CHECKS)
+    if args.check:
+        checks = [c for part in args.check for c in part.split(",") if c]
+        bad = [c for c in checks if c not in CHECKS]
+        if bad:
+            ap.error(f"unknown check(s) {bad}; choose from {CHECKS}")
+
+    if args.fixture is not None:
+        if args.fixture not in FIXTURES:
+            ap.error(f"unknown fixture {args.fixture!r} "
+                     f"(see --list-fixtures)")
+        target = FIXTURES[args.fixture][0]
+    else:
+        target = pc.DEFAULT_TARGET
+
+    found = analyze(target, checks=checks)
+    print(findings_mod.render_report(found, checks))
+    if args.json is not None:
+        payload = findings_mod.json_report(found, checks, target.name)
+        if args.json == "-":
+            print(payload)
+        else:
+            Path(args.json).write_text(payload + "\n", encoding="utf-8")
+    return 1 if any(not f.waived for f in found) else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

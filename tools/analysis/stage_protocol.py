@@ -1,0 +1,301 @@
+"""Pass 1 — stage-protocol checker.
+
+Linearizes each contract driver's AST (splicing the engine's stage/group
+callbacks in at their call sites) into a sequence of data-plane EFFECTS
+(``plane_contract.EFFECT_OF_CALL``), then verifies the ordering and
+fusion invariants of the driver's protocol on that static stage graph:
+
+* restore-before-use      — a device restore may never follow the attend
+                            launch of its (layer, group) window;
+* writeback-before-drop   — any device drop / HBM layer evict must be
+                            preceded by a FlashD2H save in the same or an
+                            enclosing window, and an in-window drop must
+                            carry the one-stage eviction ``protect=``;
+* fused-transfer          — at most one fused FlashD2H save / H2D load /
+                            restore per window; per-request (unfused)
+                            saves are findings (waived only in the legacy
+                            executors);
+* ctx-lifetime            — the one-layer prefill ctx buffer is read only
+                            inside the group callback window;
+* launches-per-iteration  — no jitted stage launch inside a loop over
+                            requests (the O(L) launch budget).
+
+Purely syntactic: nothing is imported or executed.
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+from pathlib import Path
+from typing import Dict, List, Optional, Tuple
+
+from repro.core import plane_contract as pc
+
+from .findings import Finding
+
+_LOOPS = (ast.For, ast.AsyncFor, ast.While)
+_FUNCS = (ast.FunctionDef, ast.AsyncFunctionDef, ast.Lambda)
+
+
+def _parse(repo_root: Path, file: str,
+           cache: Dict[str, ast.Module]) -> ast.Module:
+    if file not in cache:
+        cache[file] = ast.parse((repo_root / file).read_text(
+            encoding="utf-8"), filename=file)
+    return cache[file]
+
+
+def find_def(tree: ast.Module, qualname: str) -> Optional[ast.AST]:
+    """Locate a (possibly nested) def/class by dotted qualname."""
+    parts = qualname.split(".")
+    scope: ast.AST = tree
+    for part in parts:
+        nxt = None
+        for node in ast.iter_child_nodes(scope):
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                 ast.ClassDef)) and node.name == part:
+                nxt = node
+                break
+        if nxt is None:
+            return None
+        scope = nxt
+    return scope
+
+
+def callee_name(call: ast.Call) -> Optional[str]:
+    f = call.func
+    if isinstance(f, ast.Attribute):
+        return f.attr
+    if isinstance(f, ast.Name):
+        return f.id
+    if isinstance(f, ast.Subscript):        # fns._recurrent[kind](...)
+        v = f.value
+        if isinstance(v, ast.Attribute):
+            return v.attr
+        if isinstance(v, ast.Name):
+            return v.id
+    return None
+
+
+def _expr_names(node: ast.AST) -> set:
+    """Terminal Name ids and Attribute attrs in an expression — used to
+    decide whether a loop iterates a contract batch iterable."""
+    out = set()
+    for n in ast.walk(node):
+        if isinstance(n, ast.Name):
+            out.add(n.id)
+        elif isinstance(n, ast.Attribute):
+            out.add(n.attr)
+    return out
+
+
+@dataclasses.dataclass
+class Effect:
+    kind: str
+    sub: str
+    call: str
+    file: str
+    line: int
+    stack: Tuple[int, ...]          # enclosing loop ids, outermost first
+    batch: bool                     # inside a loop over requests
+    in_callback: bool
+    kwargs: Tuple[str, ...]
+
+
+class _Linearizer:
+    """Walks a driver body in source order collecting effects; loops push
+    a window onto the stack; callback calls splice the callback's own
+    linearized body at the call site."""
+
+    def __init__(self, repo_root: Path, driver: pc.DriverSpec,
+                 cache: Dict[str, ast.Module]):
+        self.repo_root = repo_root
+        self.driver = driver
+        self.cache = cache
+        self.effects: List[Effect] = []
+        self.cb_bodies: Dict[str, Tuple[str, ast.AST]] = {}
+        for cb in driver.callbacks:
+            tree = _parse(repo_root, cb.file, cache)
+            node = find_def(tree, cb.qualname)
+            if node is not None:
+                self.cb_bodies[cb.local_name] = (cb.file, node)
+
+    def run(self) -> List[Effect]:
+        tree = _parse(self.repo_root, self.driver.file, self.cache)
+        node = find_def(tree, self.driver.qualname)
+        if node is None:
+            return []
+        self._body(node.body, self.driver.file, (), False, False)
+        return self.effects
+
+    def _is_batch_loop(self, loop: ast.AST) -> bool:
+        if not isinstance(loop, (ast.For, ast.AsyncFor)):
+            return False
+        return bool(_expr_names(loop.iter)
+                    & set(self.driver.batch_iterables))
+
+    def _body(self, stmts, file, stack, batch, in_cb) -> None:
+        for stmt in stmts:
+            self._stmt(stmt, file, stack, batch, in_cb)
+
+    def _stmt(self, stmt, file, stack, batch, in_cb) -> None:
+        if isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef,
+                             ast.ClassDef)):
+            return                          # runs at call time, not here
+        if isinstance(stmt, (ast.For, ast.AsyncFor)):
+            self._exprs(stmt.iter, file, stack, batch, in_cb)
+            sub_stack = stack + (id(stmt),)
+            sub_batch = batch or self._is_batch_loop(stmt)
+            self._body(stmt.body, file, sub_stack, sub_batch, in_cb)
+            self._body(stmt.orelse, file, stack, batch, in_cb)
+            return
+        if isinstance(stmt, ast.While):
+            self._exprs(stmt.test, file, stack, batch, in_cb)
+            sub_stack = stack + (id(stmt),)
+            self._body(stmt.body, file, sub_stack, batch, in_cb)
+            self._body(stmt.orelse, file, stack, batch, in_cb)
+            return
+        if isinstance(stmt, ast.If):
+            self._exprs(stmt.test, file, stack, batch, in_cb)
+            self._body(stmt.body, file, stack, batch, in_cb)
+            self._body(stmt.orelse, file, stack, batch, in_cb)
+            return
+        if isinstance(stmt, (ast.With, ast.AsyncWith)):
+            for item in stmt.items:
+                self._exprs(item.context_expr, file, stack, batch, in_cb)
+            self._body(stmt.body, file, stack, batch, in_cb)
+            return
+        if isinstance(stmt, ast.Try):
+            self._body(stmt.body, file, stack, batch, in_cb)
+            for h in stmt.handlers:
+                self._body(h.body, file, stack, batch, in_cb)
+            self._body(stmt.orelse, file, stack, batch, in_cb)
+            self._body(stmt.finalbody, file, stack, batch, in_cb)
+            return
+        self._exprs(stmt, file, stack, batch, in_cb)
+
+    def _exprs(self, node, file, stack, batch, in_cb) -> None:
+        """Collect effect calls inside one statement/expression, in field
+        order, skipping nested function bodies."""
+        if node is None or isinstance(node, _FUNCS):
+            return
+        if isinstance(node, ast.Call):
+            # callback splice happens INSTEAD of recording an effect
+            if (isinstance(node.func, ast.Name)
+                    and node.func.id in self.cb_bodies):
+                for arg in node.args:
+                    self._exprs(arg, file, stack, batch, in_cb)
+                cb_file, cb_node = self.cb_bodies[node.func.id]
+                self._body(cb_node.body, cb_file, stack, batch, True)
+                return
+            # record nested effect calls (arguments) before the outer call
+            for child in ast.iter_child_nodes(node):
+                self._exprs(child, file, stack, batch, in_cb)
+            name = callee_name(node)
+            eff = pc.EFFECT_OF_CALL.get(name) if name else None
+            if eff is not None:
+                self.effects.append(Effect(
+                    kind=eff[0], sub=eff[1], call=name, file=file,
+                    line=node.lineno, stack=stack, batch=batch,
+                    in_callback=in_cb,
+                    kwargs=tuple(kw.arg for kw in node.keywords
+                                 if kw.arg)))
+            return
+        for child in ast.iter_child_nodes(node):
+            self._exprs(child, file, stack, batch, in_cb)
+
+
+def _related(a: Tuple[int, ...], b: Tuple[int, ...]) -> bool:
+    """True when one window stack encloses (is a prefix of) the other."""
+    n = min(len(a), len(b))
+    return a[:n] == b[:n]
+
+
+def check_driver(repo_root: Path, driver: pc.DriverSpec,
+                 cache: Dict[str, ast.Module]) -> List[Finding]:
+    effects = _Linearizer(repo_root, driver, cache).run()
+    rules = set(pc.PROTOCOL_RULES[driver.protocol])
+    out: List[Finding] = []
+
+    def flag(rule, eff, msg):
+        out.append(Finding(rule=rule, file=eff.file, line=eff.line,
+                           message=f"[{driver.name}] {msg}",
+                           check="stage-protocol"))
+
+    if pc.RULE_RESTORE_BEFORE_USE in rules:
+        for i, e in enumerate(effects):
+            if e.kind != "restore":
+                continue
+            for a in effects[:i]:
+                if (a.kind == "launch" and a.sub == "attend"
+                        and _related(a.stack, e.stack)):
+                    flag(pc.RULE_RESTORE_BEFORE_USE, e,
+                         f"restore ({e.call}) placed AFTER the attend "
+                         f"launch at line {a.line} — restores must land "
+                         f"between select and attend")
+                    break
+
+    if pc.RULE_WRITEBACK_BEFORE_DROP in rules:
+        for i, e in enumerate(effects):
+            if e.kind not in ("drop", "layer-evict"):
+                continue
+            has_wb = any(d.kind == "d2h" and _related(d.stack, e.stack)
+                         for d in effects[:i])
+            if not has_wb:
+                flag(pc.RULE_WRITEBACK_BEFORE_DROP, e,
+                     f"{e.call} with no preceding FlashD2H write-back in "
+                     f"its window — dropped data would exist nowhere")
+            if (e.kind == "drop" and e.stack
+                    and driver.protocol == "staged-decode"
+                    and "protect" not in e.kwargs):
+                flag(pc.RULE_WRITEBACK_BEFORE_DROP, e,
+                     f"in-window {e.call} without protect= — blocks "
+                     f"selected by the imminent attend must be deferred "
+                     f"one stage")
+
+    if pc.RULE_FUSED_TRANSFER in rules:
+        per_window: Dict[Tuple, Dict[str, int]] = {}
+        for e in effects:
+            if e.kind == "d2h" and e.sub == "unfused":
+                flag(pc.RULE_FUSED_TRANSFER, e,
+                     f"per-request {e.call} — the plane protocol requires "
+                     f"ONE fused FlashD2H save per (layer, group)")
+                continue
+            if (e.kind == "restore" and e.sub == "unfused"
+                    and driver.protocol != "legacy"):
+                flag(pc.RULE_FUSED_TRANSFER, e,
+                     f"per-request {e.call} — use the fused batch restore")
+                continue
+            if e.kind in ("d2h", "h2d", "restore"):
+                seen = per_window.setdefault(e.stack, {})
+                seen[e.kind] = seen.get(e.kind, 0) + 1
+                if seen[e.kind] > 1:
+                    flag(pc.RULE_FUSED_TRANSFER, e,
+                         f"{seen[e.kind]} {e.kind} transfers in one "
+                         f"(layer, group) window — transfers must fuse to "
+                         f"one launch per window")
+
+    if pc.RULE_CTX_LIFETIME in rules:
+        for e in effects:
+            if e.kind == "ctx-read" and not e.in_callback:
+                flag(pc.RULE_CTX_LIFETIME, e,
+                     f"{e.call} outside the group callback — the "
+                     f"one-layer ctx buffer is overwritten by the next "
+                     f"layer's launch")
+
+    if pc.RULE_LAUNCHES in rules:
+        for e in effects:
+            if e.kind == "launch" and e.batch:
+                flag(pc.RULE_LAUNCHES, e,
+                     f"jitted launch ({e.call}) inside a per-request loop "
+                     f"— launches must stay O(num_layers) per iteration")
+
+    return out
+
+
+def run(repo_root: Path, target: pc.AnalysisTarget) -> List[Finding]:
+    cache: Dict[str, ast.Module] = {}
+    out: List[Finding] = []
+    for driver in target.drivers:
+        out.extend(check_driver(repo_root, driver, cache))
+    return out
