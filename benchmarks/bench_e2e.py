@@ -1,6 +1,13 @@
 """Paper Figs. 10-12: mean TTFT / token throughput / mean TBT vs request
 rate for vLLM / vLLM-S / vLLM-SO / SparseServe (LWM-7B + Llama3-8B,
-LongBench-shaped trace, discrete-event simulator on the A100 cost model)."""
+LongBench-shaped trace, discrete-event simulator on the A100 cost model).
+
+Plus `hybrid_plane`: the REAL engine on a staggered-arrival workload under
+the mixed single-iteration plane (prefill segments riding decode layer
+walks, one fused host stage per layer) vs the "split" two-plane oracle —
+TTFT/TBT, jitted launches per iteration, and fused FlashD2H/H2D call
+counts (greedy outputs are asserted byte-identical in
+tests/test_hybrid_plane.py)."""
 from __future__ import annotations
 
 import os as _os
@@ -21,6 +28,58 @@ MAXLEN = {"lwm-7b": 32768, "llama3-8b": 131072}
 SYSTEMS_RUN = ("vllm", "vllm-s", "vllm-so", "sparseserve")
 
 
+def hybrid_plane_vs_split() -> None:
+    """Real engine, staggered arrivals: the mixed single-iteration plane
+    vs the split two-plane oracle on the same workload."""
+    header("hybrid_plane: mixed single-iteration plane vs split oracle")
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.configs import get_smoke_config
+    from repro.models import model as M
+    from repro.serving.engine import EngineConfig, ServingEngine
+    from repro.serving.request import Request
+
+    cfg = get_smoke_config("qwen2-0.5b")
+    params = M.init_params(cfg, jax.random.PRNGKey(0), jnp.float32)
+    prompts = (96, 96, 64, 64, 96, 64)
+    rows = {}
+    for mode in ("split", "mixed"):
+        eng = ServingEngine(params, cfg, EngineConfig(
+            r_max=4, chunk_size=64, hybrid_plane=mode,
+            prefill_max_tokens_per_step=32))
+        rng = np.random.default_rng(0)
+        for i, p in enumerate(prompts):
+            # arrivals spaced so later admissions land mid-decode of the
+            # earlier rows: every iteration kind (pure prefill, pure
+            # decode, truly mixed) occurs
+            eng.submit(Request(prompt_len=p, max_new_tokens=6,
+                               arrival_time=i * 3e-5),
+                       tokens=rng.integers(4, cfg.vocab_size,
+                                           p).astype(np.int32))
+        m = eng.run()
+        s = eng.transfer_stats()
+        log = eng.mixed_iter_log
+        rows[mode] = dict(
+            mode=mode,
+            mean_ttft_s=round(m.mean_ttft, 6),
+            mean_tbt_ms=round(m.mean_tbt * 1e3, 3),
+            iterations=eng.iterations,
+            launches_per_iter=(round(sum(e["launches"] for e in log)
+                                     / max(len(log), 1), 2) if log else 0),
+            mixed_iter_frac=(round(sum(1 for e in log
+                                       if e["decode_rows"] > 0
+                                       and e["prefill_rows"] > 0)
+                                   / max(len(log), 1), 3) if log else 0.0),
+            d2h_calls=s.d2h_calls, h2d_calls=s.h2d_calls)
+    rows["mixed"]["ttft_split_over_mixed"] = round(
+        rows["split"]["mean_ttft_s"]
+        / max(rows["mixed"]["mean_ttft_s"], 1e-9), 3)
+    for mode in ("split", "mixed"):
+        emit("hybrid_plane", **rows[mode])
+
+
 def main(num_requests: int = 32) -> None:
     header("fig10-12_e2e: TTFT/throughput/TBT vs request rate")
     for model in ("lwm-7b", "llama3-8b"):
@@ -37,6 +96,7 @@ def main(num_requests: int = 32) -> None:
                      tbt_ms=round(m.mean_tbt * 1e3, 2),
                      tok_per_s=round(m.token_throughput, 2),
                      finished=m.num_finished)
+    hybrid_plane_vs_split()
 
 
 if __name__ == "__main__":

@@ -93,6 +93,10 @@ EFFECT_OF_CALL: Dict[str, Tuple[str, str]] = {
     "rec": ("launch", "prefill-rec"),
     "finalize": ("launch", "finalize"),
     "_run_group": ("launch", "prefill-group"),
+    # mixed-iteration walk (core/hybrid_plane.py): the hybrid driver runs
+    # a layer's prefill groups / the shared finalize through these
+    "run_layer": ("launch", "prefill-group"),
+    "finish_iteration": ("launch", "finalize"),
     # FlashD2H
     "save_new_tokens_fused": ("d2h", "fused"),
     "save_contiguous": ("d2h", "unfused"),
@@ -152,6 +156,11 @@ PROTOCOL_RULES: Dict[str, Tuple[str, ...]] = {
                       RULE_CTX_LIFETIME, RULE_LAUNCHES),
     # the single batched launch that executes one group
     "prefill-group": (RULE_FUSED_TRANSFER, RULE_LAUNCHES),
+    # the mixed iteration (decode rows + prefill segments in ONE layer
+    # walk): the staged-decode window rules AND the prefill ctx/writeback
+    # rules apply together — every pass-1 rule covers this driver
+    "hybrid-plane": (RULE_RESTORE_BEFORE_USE, RULE_WRITEBACK_BEFORE_DROP,
+                     RULE_FUSED_TRANSFER, RULE_CTX_LIFETIME, RULE_LAUNCHES),
     # fused decode plane: transfers are per-layer fused, but restores land
     # after the forward (restore-before-use deliberately does NOT apply;
     # that is exactly why drop_evicted_device_blocks needs the staged plane)
@@ -189,6 +198,24 @@ DEFAULT_DRIVERS: Tuple[DriverSpec, ...] = (
         qualname="PrefillPlane._run_group",
         protocol="prefill-group",
         batch_iterables=("rids", "req_ids"),
+    ),
+    DriverSpec(
+        name="hybrid-plane",
+        file="src/repro/core/hybrid_plane.py",
+        qualname="HybridPlane.run_iteration",
+        protocol="hybrid-plane",
+        callbacks=(CallbackSpec(
+            "layer_cb", "src/repro/serving/engine.py",
+            "ServingEngine._mixed_iteration.layer_cb"),),
+        batch_iterables=("token_by_req", "req_ids", "rids", "sts",
+                         "allow"),
+    ),
+    DriverSpec(
+        name="hybrid-prefill-layer",
+        file="src/repro/core/prefill_plane.py",
+        qualname="PrefillPlane.run_layer",
+        protocol="prefill-group",
+        batch_iterables=("rids", "req_ids", "allow"),
     ),
     DriverSpec(
         name="fused-decode-selections",
@@ -245,6 +272,8 @@ DEFAULT_REGISTRIES: Tuple[RegistrySpec, ...] = (
                  ("cfg", "plane_mesh"), ("cfg", "plane_mesh")),
     RegistrySpec("src/repro/core/prefill_plane.py", "admit_embed_fns_for",
                  ("cfg",), ("cfg",)),
+    RegistrySpec("src/repro/core/hybrid_plane.py", "hybrid_fns_for",
+                 ("cfg", "attn_impl", "plane_mesh"), ("cfg", "plane_mesh")),
 )
 
 # files whose jit-wrapped stage bodies pass 2 lints (wrap(...)/jax.jit(...)
@@ -253,6 +282,9 @@ DEFAULT_REGISTRIES: Tuple[RegistrySpec, ...] = (
 DEFAULT_JIT_FILES: Tuple[str, ...] = (
     "src/repro/core/device_pool.py",
     "src/repro/core/prefill_plane.py",
+    # composes the two registries above — no jit sites of its own today,
+    # listed so any future wrap()/jax.jit added there is linted
+    "src/repro/core/hybrid_plane.py",
 )
 STATIC_PARAM_NAMES = frozenset({"self", "cfg", "kind", "stage"})
 
@@ -328,6 +360,19 @@ def staged_launches_per_iteration(cfg) -> int:
     return 2 + 2 * n_attn + (cfg.num_layers - n_attn)
 
 
+def mixed_launches_per_iteration(cfg, n_decode_planes: int, n_groups: int,
+                                 n_finalize_planes: int) -> int:
+    """Jitted launches ONE mixed iteration of the hybrid plane issues:
+    every decode plane pays the full staged budget, plus one bucketed
+    launch per executed prefill (layer, chunk) group and one shared
+    finalize per prefill plane with finished rows.  Independent of how
+    many decode ROWS or prefill requests ride each plane — the O(L)
+    budget ``tests/planeasserts.assert_mixed_launch_invariant`` checks
+    against the engine's measured ``mixed_iter_log``."""
+    return (n_decode_planes * staged_launches_per_iteration(cfg)
+            + n_groups + n_finalize_planes)
+
+
 def staged_stage_kinds(cfg) -> int:
     """Distinct stage kinds of the staged decode pipeline for ``cfg`` —
     the per-shape-bucket trace budget (embed, select, attend, logits, plus
@@ -342,6 +387,9 @@ def iter_registries():
     what the sharding-leak pass lowers.  Imported lazily so the contract
     itself stays import-light."""
     from repro.core import device_pool, prefill_plane
+    # NOTE: the hybrid registry (hybrid_plane._HYBRID_FNS) is deliberately
+    # absent — it COMPOSES the staged and prefill registries below without
+    # adding jits; lowering it here would double-check every stage.
     for name, reg in (("staged", device_pool._STAGED_FNS),
                       ("prefill", prefill_plane._PREFILL_FNS),
                       ("admit-embed", prefill_plane._ADMIT_EMBED_FNS)):

@@ -157,6 +157,19 @@ class PrefillIterationResult:
                                             # KV and count 0)
 
 
+@dataclasses.dataclass
+class PrefillWalk:
+    """Budget/progress state of ONE mixed-iteration walk over a plane
+    (``begin_iteration`` -> ``run_layer`` per model layer ->
+    ``finish_iteration``) — exactly what ``run_iteration``'s pass loop
+    keeps in locals."""
+    allow: Dict[str, int]
+    ran: set = dataclasses.field(default_factory=set)
+    finished: List[str] = dataclasses.field(default_factory=list)
+    peaks: Dict[str, int] = dataclasses.field(default_factory=dict)
+    groups: List[PrefillGroupRun] = dataclasses.field(default_factory=list)
+
+
 class PrefillPlane:
     """Persistent padded prefill state for one group of batched requests.
 
@@ -373,6 +386,76 @@ class PrefillPlane:
         self.iterations += 1
         return PrefillIterationResult(groups=groups, finished=finished,
                                       logits=logits, peaks=peaks)
+
+    # -- mixed-iteration walk (core.hybrid_plane) --------------------------
+
+    def begin_iteration(self, allowance: Dict[str, int]) -> "PrefillWalk":
+        """Open a mixed-iteration walk over this plane's rows.  The hybrid
+        driver (``core.hybrid_plane``) visits model layers 0..L-1 ONCE per
+        engine iteration, calling ``run_layer`` at each; the walk carries
+        the same per-request budget/progress state ``run_iteration``'s pass
+        loop keeps, so both schemes execute the identical segment set."""
+        return PrefillWalk(allow={rid: int(a) for rid, a in allowance.items()
+                                  if rid in self.rows})
+
+    def run_layer(self, params: Dict, layer: int,
+                  walk: "PrefillWalk") -> List[PrefillGroupRun]:
+        """Run every segment the walk owes at ``layer``: rows whose NEXT
+        segment sits at this layer are grouped by chunk_start (one jitted
+        bucketed launch per group, same as ``run_iteration``) and chunks
+        execute in plan order until no scheduled row is pending here.
+        Because ``plan_segments`` emits segments in non-decreasing layer
+        order, exhausting each layer in the ascending walk executes exactly
+        the segments ``run_iteration``'s multi-pass loop would."""
+        out: List[PrefillGroupRun] = []
+        while True:
+            pending: Dict[int, List[str]] = {}
+            for rid in sorted(walk.allow, key=lambda r: self.rows[r]):
+                idx = self.next_idx[rid]
+                segs = self.segments[rid]
+                if idx >= len(segs):
+                    continue
+                if walk.allow[rid] <= 0 and rid in walk.ran:
+                    continue
+                seg = segs[idx]
+                if seg.layer != layer:
+                    continue
+                pending.setdefault(seg.chunk_start, []).append(rid)
+            if not pending:
+                break
+            for start in sorted(pending):
+                rids = pending[start]
+                g = self._run_group(params, layer, start, rids)
+                out.append(g)
+                walk.groups.append(g)
+                for rid in rids:
+                    seg = g.segs[rid]
+                    walk.allow[rid] -= seg.chunk_len
+                    walk.ran.add(rid)
+                    self.next_idx[rid] += 1
+                    if g.kind == "attn":
+                        walk.peaks[rid] = max(walk.peaks.get(rid, 0),
+                                              seg.chunk_start + seg.chunk_len)
+                    if seg.is_last:
+                        walk.finished.append(rid)
+        return out
+
+    def finish_iteration(self, params: Dict,
+                         walk: "PrefillWalk") -> PrefillIterationResult:
+        """Close a mixed-iteration walk: book idle residency into the
+        peaks, run the shared finalize (logits) launch for rows whose last
+        segment ran, and bump the iteration counter — the same epilogue
+        ``run_iteration`` performs after its pass loop."""
+        for rid, resident in self.resident_tokens().items():
+            walk.peaks[rid] = max(walk.peaks.get(rid, 0), resident)
+        logits = None
+        if walk.finished:
+            logits = self.fns.finalize(params, self.hidden, self._tok_len)
+            self.finalize_launches += 1
+        self.iterations += 1
+        return PrefillIterationResult(groups=walk.groups,
+                                      finished=walk.finished,
+                                      logits=logits, peaks=walk.peaks)
 
     def _run_group(self, params: Dict, layer: int, start: int,
                    rids: List[str]) -> PrefillGroupRun:

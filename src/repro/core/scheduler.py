@@ -45,6 +45,12 @@ class BatchPlan:
     prefill_reqs: List[Tuple[Request, int]]   # (request, tokens to inject)
     total_tokens: int = 0
     rejected: int = 0                          # WS-control rejections
+    # Algorithm 1's arbitration record for the MIXED iteration: HBM bytes
+    # the admitted decode rows' working sets claim vs the admitted prefill
+    # rows' watermark claim (both from estimate_*_ws_bytes; 0 with WS
+    # control off).  Their sum is what admission held under m_avl_bytes.
+    ws_decode_bytes: int = 0
+    ws_prefill_bytes: int = 0
 
 
 class Scheduler:
@@ -159,6 +165,7 @@ class Scheduler:
             plan = BatchPlan(decode, prefills)
         else:
             m_used = 0
+            ws_d = ws_p = 0
             adm_d: List[Request] = []
             adm_p: List[Tuple[Request, int]] = []
             rejected = 0
@@ -167,6 +174,7 @@ class Scheduler:
                 if m_used + m_req <= self.cfg.m_avl_bytes:
                     adm_d.append(req)
                     m_used += m_req
+                    ws_d += m_req
                 else:
                     rejected += 1          # S.reset(req): stays queued
             for req, inject in prefills:
@@ -174,9 +182,11 @@ class Scheduler:
                 if m_used + m_req <= self.cfg.m_avl_bytes:
                     adm_p.append((req, inject))
                     m_used += m_req
+                    ws_p += m_req
                 else:
                     rejected += 1
-            plan = BatchPlan(adm_d, adm_p, rejected=rejected)
+            plan = BatchPlan(adm_d, adm_p, rejected=rejected,
+                             ws_decode_bytes=ws_d, ws_prefill_bytes=ws_p)
 
         # promote admitted waiting requests to running/prefill
         for req, _ in plan.prefill_reqs:

@@ -222,6 +222,44 @@ def overlapped_decode_time(hw: HardwareSpec, mc: ModelCost, batch: int,
     return t
 
 
+def mixed_iteration_time(hw: HardwareSpec, mc: ModelCost, batch: int,
+                         attended_tokens_per_req: float,
+                         transfer_bytes_by_layer,
+                         prefill_time_by_layer=None, n_shards: int = 1,
+                         allgather_bytes_by_layer=None) -> float:
+    """ONE mixed iteration of the hybrid plane (decode rows AND prefill
+    segments in the same layer walk, ``core.hybrid_plane``).
+
+    Per model layer the walk runs decode select/attend AND the layer's
+    prefill groups, while the single per-layer host stage moves the
+    layer's fused FlashD2H/H2D payloads — so each layer is charged
+    max(decode layer compute + prefill layer compute, layer transfer),
+    the union of both planes' compute overlapping the shared transfer
+    (same pipelining bound as ``overlapped_decode_time``, with the
+    prefill launches joining the compute side of the max).
+
+    prefill_time_by_layer: modeled seconds of this iteration's prefill
+    launches per MODEL layer (``batched_prefill_time`` per group, already
+    including sharded allgathers); None or missing entries charge decode
+    only.  ``batch == 0`` (pure-prefill iteration) degenerates to the sum
+    of the prefill layer times vs the transfers."""
+    t_layer = (decode_time(hw, mc, batch, attended_tokens_per_req)
+               / max(mc.num_layers, 1)) if batch > 0 else 0.0
+    n = max(n_shards, 1)
+    ag = list(allgather_bytes_by_layer or [])
+    pf = list(prefill_time_by_layer or [])
+    t = 0.0
+    per_layer = list(transfer_bytes_by_layer)[:mc.num_layers]
+    for i in range(mc.num_layers):
+        b = per_layer[i] if i < len(per_layer) else 0
+        t_tx = fused_transfer_time(hw, b / n) if b > 0 else 0.0
+        t_cmp = t_layer + (pf[i] if i < len(pf) else 0.0)
+        t += max(t_cmp, t_tx)
+        if batch > 0 and i < len(ag):
+            t += allgather_time(hw, ag[i], n)
+    return t
+
+
 def decode_time(hw: HardwareSpec, mc: ModelCost, batch: int,
                 attended_tokens_per_req: float) -> float:
     """Memory-bound decode iteration: weights read once per iteration +

@@ -66,6 +66,8 @@ import numpy as np
 
 from repro.core import dsa as dsa_mod
 from repro.core.device_pool import BucketingPolicy, DevicePoolPlane
+from repro.core.hybrid_plane import (DecodeJob, HybridPlane, LayerWindow,
+                                     PrefillJob)
 from repro.core.kv_cache import KVCacheManager, KVGeometry, TransferStats
 from repro.core.layer_prefill import (LayerPrefillState, hbm_footprint_tokens,
                                       plan_segments)
@@ -146,6 +148,22 @@ class EngineConfig:
                                              # the model axis; requires
                                              # decode_plane="staged" and
                                              # DSA enabled.
+    hybrid_plane: str = "mixed"              # "mixed" (default): ONE
+                                             # layer-walk iteration carries
+                                             # decode rows AND prefill
+                                             # segments together
+                                             # (core.hybrid_plane) — a
+                                             # single per-layer host stage
+                                             # fuses both planes' FlashD2H
+                                             # and FlashH2D; "split": the
+                                             # two-plane path (prefill
+                                             # plane, then decode planes),
+                                             # kept as the equivalence
+                                             # oracle.  Configs the mixed
+                                             # walk cannot drive (legacy /
+                                             # chunked prefill, non-staged
+                                             # or unbatched decode) resolve
+                                             # to "split" automatically.
     drop_evicted_device_blocks: Optional[bool] = None
     # True: HBM-evicted blocks are physically zeroed on device and restored
     # from the host pool via the fused H2D gather when re-selected.  On the
@@ -211,6 +229,19 @@ class ServingEngine:
                     "mesh_spec requires attn_impl='ref': the sharded "
                     "attend stage runs the reference block-sparse "
                     "attention inside shard_map (no Pallas-kernel path)")
+        if eng.hybrid_plane not in ("mixed", "split"):
+            raise ValueError(f"unknown hybrid_plane {eng.hybrid_plane!r}; "
+                             f"expected 'mixed' or 'split'")
+        if eng.hybrid_plane == "mixed" and not (
+                eng.batched_decode and eng.decode_plane == "staged"
+                and eng.prefill_mode == "layer_segmented"
+                and eng.prefill_exec == "plane"):
+            # the mixed walk drives exactly the staged decode plane and
+            # the batched prefill plane; every other executor combination
+            # falls back to the split two-plane path.  Resolve into a COPY
+            # (same rationale as drop_evicted_device_blocks below).
+            eng = dataclasses.replace(eng, hybrid_plane="split")
+            self.eng = eng
         if eng.prefill_mode == "chunked" and cfg.attention_type == "mla":
             # the chunked baseline carries dense (k, v) context between
             # chunks; MLA's latent cache has no chunked-context path yet
@@ -280,6 +311,13 @@ class ServingEngine:
         self._req_prefill_plane: Dict[str, PrefillPlane] = {}
         self.prefill_launches = 0                # batched plane launches
         self.admit_embed_launches = 0            # batched admission embeds
+        self.hybrid = (HybridPlane(cfg)
+                       if eng.hybrid_plane == "mixed" else None)
+        self.mixed_iter_log: List[Dict[str, Any]] = []
+        # per mixed iteration: per-layer fused d2h/h2d call counts, group
+        # counts and the measured jitted-launch total — what
+        # tests/planeasserts.assert_mixed_launch_invariant checks against
+        # plane_contract.mixed_launches_per_iteration
         self._staged_layer_bytes: Dict[int, int] = {}    # model layer ->
                                                          # H2D restore bytes
                                                          # this iteration
@@ -727,6 +765,280 @@ class ServingEngine:
         return t, done, fp
 
     # ------------------------------------------------------------------
+    # Mixed iteration (hybrid plane)
+    # ------------------------------------------------------------------
+    def _mixed_iteration(self, plan: BatchPlan
+                         ) -> Tuple[int, List[Request], int, List[float]]:
+        """One MIXED iteration: every decode group's staged pipeline and
+        every prefill plane's (layer, chunk) groups ride the SAME layer
+        walk (``HybridPlane.run_iteration``), sharing one per-layer host
+        stage.  Per attention layer the ``layer_cb`` below does, in order:
+
+        1. ONE merged fused FlashD2H: decode write-back of the layer's
+           just-appended KV (every decode plane) PLUS the layer's fresh
+           prefill-chunk KV (``read_group_kv`` per group, same-rid chunks
+           concatenated — chunks of one layer are contiguous), in a single
+           ``save_new_tokens_fused`` call;
+        2. LRU residency for every decode plane's selections, then at most
+           ONE merged fused FlashH2D (``load_blocks_fused``) covering all
+           planes' misses, scattered into each plane's slots BEFORE the
+           attention that selected them;
+        3. the one-stage-deferred eviction drop (``protect=``) and the
+           ``staged_probe`` hook, per decode plane;
+        4. prefill end-of-layer pool builds + HBM layer eviction (the
+           one-layer bound), exactly as the split path's group callback.
+
+        Returns (blocks loaded, finished prefill requests, iteration HBM
+        footprint in token-layer units, per-model-layer modeled prefill
+        seconds for ``costmodel.mixed_iteration_time``)."""
+        L = self.cfg.num_layers
+        done: List[Request] = []
+        fp = 0
+        drop = self.eng.drop_evicted_device_blocks
+        per_block_bytes = (self.geom.block_bytes_per_head
+                           * self.geom.num_kv_heads)
+        prefill_by_layer = [0.0] * L
+        loads_total = [0]
+        spent: Dict[str, int] = {}
+
+        # prefill jobs (admission mirrors _prefill_plane_iteration)
+        pre_h = self._batched_admit_embed(
+            [self.states[req.req_id] for req, _ in plan.prefill_reqs
+             if req.req_id not in self._req_prefill_plane])
+        by_plane: Dict[int, Tuple[PrefillPlane, Dict[str, int]]] = {}
+        for req, inject in plan.prefill_reqs:
+            st = self.states[req.req_id]
+            if req.scheduled_time is None:
+                req.scheduled_time = self.now
+            plane = self._req_prefill_plane.get(req.req_id)
+            if plane is None:
+                plane = self._admit_prefill_plane(st,
+                                                  h=pre_h.get(req.req_id))
+            st.prefill_carry += max(int(inject), 1)
+            _, allow = by_plane.setdefault(id(plane), (plane, {}))
+            allow[req.req_id] = st.prefill_carry
+        prefill_jobs = [PrefillJob(plane, allow)
+                        for plane, allow in by_plane.values()]
+
+        # decode jobs (grouping mirrors step()'s split decode dispatch)
+        groups: Dict[Tuple, List[_ReqState]] = {}
+        for req in plan.decode_reqs:
+            st = self.states[req.req_id]
+            if st.group_key is None:
+                st.group_key = self._decode_group_key(st)
+            groups.setdefault(st.group_key, []).append(st)
+        decode_jobs: List[DecodeJob] = []
+        decode_sts: List[List[_ReqState]] = []
+        pending_evict: Dict[int, Dict[str, set]] = {}
+        sel_pairs: Dict[str, List[Tuple[int, int]]] = {}
+        for key, sts in groups.items():
+            plane = self._plane_for(key, sts)
+            decode_jobs.append(DecodeJob(plane, {
+                st.req.req_id: st.out_tokens[-1] for st in sts}))
+            decode_sts.append(sts)
+            pending_evict[id(plane)] = {st.req.req_id: set() for st in sts}
+            sel_pairs.update({st.req.req_id: [] for st in sts})
+
+        entry: Dict[str, Any] = {
+            "layers": {}, "decode_planes": len(decode_jobs),
+            "decode_rows": len(plan.decode_reqs),
+            "prefill_rows": len(plan.prefill_reqs),
+            "groups": 0, "finalize": 0, "launches": 0}
+
+        def layer_cb(win: LayerWindow) -> None:
+            lidx = (self._attn_layer_index(win.layer)
+                    if win.kind == "attn" else -1)
+            lay_log = {"d2h": 0, "h2d": 0, "groups": len(win.groups),
+                       "attn": win.kind == "attn",
+                       "decode": bool(win.selections)}
+            entry["layers"][win.layer] = lay_log
+            # prefill launch cost + budget accounting (attn and recurrent)
+            for plane, g in win.groups:
+                n_shards, ag_bytes = 1, 0
+                if (self.plane_mesh is not None and g.kind == "attn"
+                        and self.cfg.attention_type != "mla"):
+                    n_shards = self.plane_mesh.model_size
+                    tok = sum(g.segs[rid].chunk_len for rid in g.req_ids)
+                    ag_bytes = int(tok * self.mc.kv_bytes_per_token
+                                   / max(self.geom.num_layers, 1))
+                prefill_by_layer[win.layer] += cm.batched_prefill_time(
+                    self.hw, self.mc,
+                    [(g.segs[rid].chunk_len,
+                      g.chunk_start + g.segs[rid].chunk_len)
+                     for rid in g.req_ids], layers=1,
+                    n_shards=n_shards, allgather_bytes=ag_bytes)
+                self.prefill_launches += 1
+                for rid in g.req_ids:
+                    spent[rid] = spent.get(rid, 0) + g.segs[rid].chunk_len
+            # 1. ONE merged fused FlashD2H: decode write-back + fresh
+            #    prefill-chunk KV of THIS layer, single save call
+            kv_merge: Dict[str, Tuple[int, Any, Any]] = {}
+            for d, sel in win.selections:
+                if not self.eng.decode_write_back:
+                    continue
+                k, v = d.plane.new_token_kv(d.req_ids, d.prev,
+                                            layers=[win.layer])[win.layer]
+                for i, rid in enumerate(d.req_ids):
+                    kv_merge[rid] = (d.prev[rid], k[i][:, None, :],
+                                     None if v is None else v[i][:, None, :])
+            for plane, g in win.groups:
+                if g.kind != "attn":
+                    continue
+                for rid, (k, v) in plane.read_group_kv(g).items():
+                    cur = kv_merge.get(rid)
+                    if cur is None:
+                        kv_merge[rid] = (g.chunk_start, k, v)
+                    else:
+                        # same-rid chunks of one layer are contiguous in
+                        # plan order: extend the stripe along tokens
+                        s0, k0, v0 = cur
+                        kv_merge[rid] = (
+                            s0, np.concatenate([k0, k], axis=1),
+                            None if v is None
+                            else np.concatenate([v0, v], axis=1))
+            if kv_merge:
+                self.kv_mgr.save_new_tokens_fused(lidx, kv_merge)
+                lay_log["d2h"] += 1
+                for rid in kv_merge:
+                    pool = self.kv_mgr.pools.get(rid)
+                    if pool is not None:
+                        pool.flush()
+            # 2. LRU per decode plane, then at most ONE merged FlashH2D
+            merged_missing: Dict[str, List[int]] = {}
+            rounds = []
+            for d, sel in win.selections:
+                if sel is None:
+                    continue
+                blocks_by_req: Dict[str, List[int]] = {}
+                for rid in d.req_ids:
+                    blocks = dsa_mod.selected_block_ids(
+                        sel[d.plane.rows[rid]])
+                    blocks_by_req[rid] = blocks
+                    sel_pairs[rid].extend((lidx, x) for x in blocks)
+                missing_by_req, evicted_by_req = self.kv_mgr.access_layer(
+                    lidx, blocks_by_req, drain_evicted=drop)
+                pe = pending_evict[id(d.plane)]
+                for rid, ev in evicted_by_req.items():
+                    pe[rid].update(ev)
+                loads_total[0] += sum(len(m)
+                                      for m in missing_by_req.values())
+                merged_missing.update(missing_by_req)
+                rounds.append((d, blocks_by_req, missing_by_req))
+            if merged_missing:
+                self._staged_layer_bytes[win.layer] = (
+                    self._staged_layer_bytes.get(win.layer, 0)
+                    + sum(len(m) for m in merged_missing.values())
+                    * per_block_bytes)
+                payloads = self.kv_mgr.load_blocks_fused(lidx,
+                                                         merged_missing)
+                lay_log["h2d"] += 1
+                if self.eng.decode_write_back:
+                    for d, _, missing_by_req in rounds:
+                        if missing_by_req:
+                            d.plane.restore_blocks_fused(
+                                win.layer,
+                                {rid: (missing_by_req[rid], k, v)
+                                 for rid, (k, v) in payloads.items()
+                                 if rid in missing_by_req},
+                                before_use=True)
+            # 3. deferred eviction drop + probe, per decode plane
+            for d, blocks_by_req, _ in rounds:
+                sts_d = [self.states[rid] for rid in d.req_ids]
+                if drop:
+                    self._drop_pending_evictions(
+                        d.plane, sts_d, pending_evict[id(d.plane)],
+                        protect=(lidx, blocks_by_req))
+                if self.staged_probe is not None:
+                    self.staged_probe(self, d.plane, win.layer, sts_d,
+                                      blocks_by_req)
+            # 4. prefill end-of-layer: decode pool builds + HBM layer evict
+            for plane, g in win.groups:
+                if g.kind != "attn":
+                    continue
+                for rid in g.req_ids:
+                    if not g.segs[rid].is_last_chunk_of_layer:
+                        continue
+                    st_r = self.states[rid]
+                    pool_kv, _ = self._kv_to_layer_cache(
+                        st_r, plane.layer_ctx(rid))
+                    st_r.decode_state["caches"][g.layer] = pool_kv
+                    cache = self.kv_mgr.caches.get(rid)
+                    if cache is not None:
+                        cache.drop_layer(lidx)
+
+        involved: Dict[int, Any] = {}
+        for job in decode_jobs:
+            involved[id(job.plane.staged_fns)] = job.plane.staged_fns
+        for pj in prefill_jobs:
+            involved[id(pj.plane.fns)] = pj.plane.fns
+        calls0 = sum(f.calls for f in involved.values())
+        res = self.hybrid.run_iteration(self.params, decode_jobs,
+                                        prefill_jobs, layer_cb)
+        entry["launches"] = sum(f.calls
+                                for f in involved.values()) - calls0
+
+        # decode epilogue (mirrors _decode_batch_staged's tail)
+        for (plane, logits, _info, _prev), sts in zip(res.decode,
+                                                      decode_sts):
+            self.decode_step_calls += 1
+            self.decode_tokens += len(sts)
+            if drop:
+                self._drop_pending_evictions(plane, sts,
+                                             pending_evict[id(plane)])
+            for st in sts:
+                row = plane.rows[st.req.req_id]
+                st.last_logits = logits[row:row + 1]
+                st.out_tokens.append(self._sample(st))
+                if sel_pairs[st.req.req_id]:
+                    self.scheduler.observe_selection(
+                        st.req, sel_pairs[st.req.req_id])
+
+        # prefill epilogue (mirrors _prefill_plane_iteration's tail)
+        for plane, pres in res.prefill:
+            entry["groups"] += len(pres.groups)
+            entry["finalize"] += 1 if pres.finished else 0
+            _, allow = by_plane[id(plane)]
+            for rid in allow:
+                st_r = self.states[rid]
+                st_r.prefill_carry = max(
+                    0, st_r.prefill_carry - spent.get(rid, 0))
+                req = st_r.req
+                if not plane.done(rid):
+                    seg = plane.segments[rid][plane.next_idx[rid]]
+                    req.prefill_layer = seg.layer
+                    req.prefill_layer_tokens_done = min(
+                        seg.chunk_start, max(req.prompt_len - 1, 0))
+            for rid, peak in pres.peaks.items():
+                fp += hbm_footprint_tokens(
+                    plane.tok_len[rid], "layer_segmented", L,
+                    layer_tokens_resident=peak)
+            for rid in pres.finished:
+                st_r = self.states[rid]
+                row = plane.rows[rid]
+                st_r.last_logits = pres.logits[row:row + 1]
+                caches = st_r.decode_state["caches"]
+                for l in range(L):
+                    if caches[l] is None and M.layer_kind(self.cfg,
+                                                          l) != "attn":
+                        caches[l] = plane.rec_state(rid, l)
+                st_r.decode_state["cur_len"] = jnp.full(
+                    (1,), plane.tok_len[rid], jnp.int32)
+                st_r.req.prefill_layer = L
+                st_r.req.prefill_layer_tokens_done = 0
+                plane.release(rid)
+                self._req_prefill_plane.pop(rid, None)
+                done.append(st_r.req)
+        for plane in self.prefill_planes.values():
+            if id(plane) in by_plane:
+                continue
+            for rid, resident in plane.resident_tokens().items():
+                fp += hbm_footprint_tokens(
+                    plane.tok_len[rid], "layer_segmented", L,
+                    layer_tokens_resident=resident)
+        self.mixed_iter_log.append(entry)
+        return loads_total[0], done, fp, prefill_by_layer
+
+    # ------------------------------------------------------------------
     # Decode execution
     # ------------------------------------------------------------------
     def _sample(self, st: _ReqState) -> int:
@@ -1062,14 +1374,23 @@ class ServingEngine:
         t0 = time.perf_counter()
         iter_loads = 0
         self._staged_layer_bytes = {}
+        mixed = self.hybrid is not None
 
         # --- prefill segments ------------------------------------------
         t_prefill = 0.0
+        prefill_by_layer: Optional[List[float]] = None
         prefill_done: List[Request] = []
         iter_prefill_fp = 0          # HBM watermark, token-layer units,
                                      # summed over the iteration's batch
         scheduled_prefill = {req.req_id for req, _ in plan.prefill_reqs}
-        if (self.eng.prefill_mode == "layer_segmented"
+        if mixed:
+            # ONE mixed iteration carries BOTH phases: decode groups and
+            # prefill planes share one layer walk and one per-layer host
+            # stage (hybrid_plane.HybridPlane); decode sampling and the
+            # prefill epilogue already ran inside
+            iter_loads, prefill_done, iter_prefill_fp, prefill_by_layer = \
+                self._mixed_iteration(plan)
+        elif (self.eng.prefill_mode == "layer_segmented"
                 and self.eng.prefill_exec == "plane"):
             # with no scheduled prefill this still books the watermark of
             # rows parked mid-layer in the planes
@@ -1138,7 +1459,9 @@ class ServingEngine:
             req.token_times.append(self.now)
 
         # --- decode steps ----------------------------------------------
-        if self.eng.batched_decode:
+        if mixed:
+            pass       # decode rode the mixed iteration above
+        elif self.eng.batched_decode:
             # ONE scheduler-planned batched forward over all running decode
             # requests (grouped only when per-request extra shapes differ,
             # e.g. whisper encoder lengths)
@@ -1177,7 +1500,26 @@ class ServingEngine:
         else:
             attended = min(self.cfg.dsa.token_budget, 1 << 30) \
                 if self.cfg.dsa.enabled else 4096
-            if (plan.decode_reqs and self.eng.batched_decode
+            if mixed:
+                # one shared walk: per layer, the union of decode+prefill
+                # compute overlaps the ONE fused transfer stage
+                n_shards = (self.plane_mesh.model_size
+                            if self.plane_mesh is not None else 1)
+                ag_bytes = None
+                if n_shards > 1 and plan.decode_reqs:
+                    sel_bytes = (len(plan.decode_reqs)
+                                 * self.geom.num_kv_heads
+                                 * self.cfg.dsa.top_k_blocks * 4)
+                    ag_bytes = [
+                        sel_bytes if M.layer_kind(self.cfg, l) == "attn"
+                        else 0 for l in range(self.cfg.num_layers)]
+                t_iter = cm.mixed_iteration_time(
+                    self.hw, self.mc, len(plan.decode_reqs), attended,
+                    [self._staged_layer_bytes.get(l, 0)
+                     for l in range(self.cfg.num_layers)],
+                    prefill_time_by_layer=prefill_by_layer,
+                    n_shards=n_shards, allgather_bytes_by_layer=ag_bytes)
+            elif (plan.decode_reqs and self.eng.batched_decode
                     and self.eng.decode_plane == "staged"):
                 # staged pipeline: per layer, H2D restores overlap compute
                 # -> charge max(compute, transfer) per layer, not the sum.

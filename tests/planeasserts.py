@@ -28,3 +28,33 @@ def staged_stage_kinds(cfg) -> int:
     """Distinct stage kinds in the staged pipeline — the per-shape-bucket
     trace budget."""
     return pc.staged_stage_kinds(cfg)
+
+
+def assert_mixed_launch_invariant(engine):
+    """Contract checks over every MIXED iteration an engine ran, from its
+    measured ``mixed_iter_log``:
+
+    * exactly ONE fused FlashD2H per attention layer that had work (and
+      none when write-back is off and no prefill group ran there);
+    * at most ONE fused FlashH2D per layer;
+    * recurrent layers never transfer;
+    * measured jitted-launch total == ``mixed_launches_per_iteration``
+      (O(L): decode planes x staged budget + prefill groups + finalizes),
+      independent of how many rows rode the iteration."""
+    assert engine.hybrid is not None, "engine is not running the mixed plane"
+    log = engine.mixed_iter_log
+    assert log, "no mixed iterations recorded"
+    cfg = engine.cfg
+    for entry in log:
+        for lay, rec in entry["layers"].items():
+            if rec["attn"]:
+                worked = (rec["decode"] and engine.eng.decode_write_back) \
+                    or rec["groups"] > 0
+                assert rec["d2h"] == (1 if worked else 0), (lay, rec)
+                assert rec["h2d"] <= 1, (lay, rec)
+            else:
+                assert rec["d2h"] == 0 and rec["h2d"] == 0, (lay, rec)
+        expected = pc.mixed_launches_per_iteration(
+            cfg, entry["decode_planes"], entry["groups"],
+            entry["finalize"])
+        assert entry["launches"] == expected, (entry, expected)

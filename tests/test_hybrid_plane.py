@@ -1,0 +1,309 @@
+"""Unified hybrid-batching plane (core/hybrid_plane.py): the MIXED
+iteration — decode rows and same-(layer, chunk) prefill segments riding
+ONE layer walk with ONE per-layer host stage — is proven byte-identical
+to the split two-plane path ("split" oracle knob) and to the sequential
+decode loop, across arch families, under 1-block-LRU eviction pressure,
+sharded and unsharded, and across randomized interleaved arrival
+schedules.  Launch counts per iteration are contract-backed
+(planeasserts.assert_mixed_launch_invariant <->
+plane_contract.mixed_launches_per_iteration)."""
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core.hybrid_plane import hybrid_fns_for
+from repro.serving.engine import EngineConfig, ServingEngine
+from repro.serving.request import Phase, Request
+
+import planeasserts as pa
+
+N_DEV = len(jax.devices())
+needs_multi = pytest.mark.skipif(
+    N_DEV < 8, reason="needs 8 forced host devices (CI multi-device job: "
+    "XLA_FLAGS=--xla_force_host_platform_device_count=8)")
+
+try:
+    from hypothesis import given, settings, strategies as hst
+    HAVE_HYPOTHESIS = True
+except ImportError:                      # container without hypothesis:
+    HAVE_HYPOTHESIS = False              # the seeded harness below still runs
+
+
+def _run(cfg, params, prompts, gen=3, seed=7, arrivals=None, enc_lens=None,
+         **kw):
+    kw.setdefault("r_max", 4)
+    kw.setdefault("chunk_size", 64)
+    eng = ServingEngine(params, cfg, EngineConfig(**kw))
+    rng = np.random.default_rng(seed)
+    order = []
+    for i, p in enumerate(prompts):
+        extra = {}
+        if cfg.is_encoder_decoder:
+            S_enc = enc_lens[i] if enc_lens else 16
+            extra["frames"] = np.ones((1, S_enc, cfg.d_model),
+                                      np.float32) * .01
+        if cfg.frontend == "vit_patch_stub":
+            extra["patch_embeds"] = np.ones(
+                (1, cfg.num_patches, cfg.d_model), np.float32) * .01
+        toks = rng.integers(4, cfg.vocab_size, p).astype(np.int32)
+        r = Request(prompt_len=p, max_new_tokens=gen,
+                    arrival_time=(arrivals[i] if arrivals else 0.0))
+        eng.submit(r, tokens=toks, **extra)
+        order.append(r.req_id)
+    eng.run()
+    return eng, [eng.states[rid].out_tokens for rid in order]
+
+
+PROMPTS = (48, 96, 72, 64)
+# later arrivals land mid-decode of the first two rows -> truly mixed
+# iterations (decode rows AND prefill segments in one layer walk)
+STAGGER = (0.0, 0.0, 1e-4, 3e-3)
+
+
+# ---------------------------------------------------------------------------
+# Default + "split" oracle knob
+# ---------------------------------------------------------------------------
+
+def test_mixed_is_default_and_resolution(smoke_setup):
+    """hybrid_plane defaults to "mixed" and auto-resolves to "split"
+    whenever any required sub-plane (staged decode, plane prefill,
+    batched decode, layer-segmented mode) is disabled."""
+    cfg, params = smoke_setup("qwen2-0.5b")
+    assert EngineConfig().hybrid_plane == "mixed"
+    eng = ServingEngine(params, cfg, EngineConfig())
+    assert eng.hybrid is not None and eng.eng.hybrid_plane == "mixed"
+    for kw in (dict(batched_decode=False),
+               dict(decode_plane="persistent"),
+               dict(prefill_exec="legacy"),
+               dict(prefill_mode="chunked")):
+        e = ServingEngine(params, cfg, EngineConfig(**kw))
+        assert e.eng.hybrid_plane == "split" and e.hybrid is None, kw
+    with pytest.raises(ValueError):
+        ServingEngine(params, cfg, EngineConfig(hybrid_plane="bogus"))
+
+
+@pytest.fixture(scope="module")
+def qwen_runs(smoke_setup):
+    """Mixed (default) / split oracle / sequential oracle over the same
+    staggered-arrival 4-request workload, with chunked segments."""
+    cfg, params = smoke_setup("qwen2-0.5b")
+    kw = dict(gen=4, arrivals=STAGGER, prefill_max_tokens_per_step=32)
+    return {
+        "mixed": _run(cfg, params, PROMPTS, **kw),
+        "split": _run(cfg, params, PROMPTS, hybrid_plane="split", **kw),
+        "sequential": _run(cfg, params, PROMPTS, batched_decode=False, **kw),
+    }
+
+
+def test_mixed_matches_split_and_sequential(qwen_runs):
+    """Acceptance: mixed greedy tokens are byte-identical to the split
+    two-plane path AND the sequential decode loop."""
+    e_m, toks_m = qwen_runs["mixed"]
+    _, toks_s = qwen_runs["split"]
+    _, toks_q = qwen_runs["sequential"]
+    assert toks_m == toks_s == toks_q
+    assert all(len(t) == 4 for t in toks_m)
+    assert e_m.hybrid.iterations == len(e_m.mixed_iter_log) > 0
+
+
+def test_iterations_are_truly_mixed_and_launch_invariant(qwen_runs):
+    """The staggered arrivals produce at least one iteration carrying
+    decode rows AND prefill rows together, and every iteration obeys the
+    contract-backed fused-transfer/launch budget."""
+    e_m, _ = qwen_runs["mixed"]
+    assert any(e["decode_rows"] > 0 and e["prefill_rows"] > 0
+               for e in e_m.mixed_iter_log), \
+        [(e["decode_rows"], e["prefill_rows"]) for e in e_m.mixed_iter_log]
+    pa.assert_mixed_launch_invariant(e_m)
+
+
+def test_split_oracle_keeps_two_plane_path(qwen_runs):
+    """The "split" knob really runs the legacy two-plane step: no hybrid
+    driver, no mixed log — a live oracle, not a renamed alias."""
+    e_s, toks_s = qwen_runs["split"]
+    assert e_s.hybrid is None
+    assert e_s.mixed_iter_log == []
+    assert all(len(t) == 4 for t in toks_s)
+
+
+def test_hybrid_registry_composes_existing_jits(qwen_runs):
+    """_HybridFns adds ZERO new traces: it composes the staged decode and
+    prefill registries, so its counters are exactly their sums and both
+    underlying caches keep the one-trace-per-shape-bucket invariant."""
+    e_m, _ = qwen_runs["mixed"]
+    fns = hybrid_fns_for(e_m.cfg, e_m.eng.attn_impl, e_m.plane_mesh)
+    assert fns.contract_protocol == "hybrid-plane"
+    [plane] = e_m.planes.values()
+    assert fns.decode is plane.staged_fns          # composition, not a copy
+    assert fns.calls == fns.decode.calls + fns.prefill.calls > 0
+    assert fns.trace_count == (fns.decode.trace_count
+                               + fns.prefill.trace_count)
+    pa.assert_cache_hit_invariant(fns.decode)
+    pa.assert_cache_hit_invariant(fns.prefill)
+    # same key -> same composed object (registry cache hit)
+    assert hybrid_fns_for(e_m.cfg, e_m.eng.attn_impl, e_m.plane_mesh) is fns
+
+
+# ---------------------------------------------------------------------------
+# Arch families x eviction pressure
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("arch", ["qwen2-0.5b", "minicpm3-4b",
+                                  "jamba-v0.1-52b", "whisper-small",
+                                  "kimi-k2-1t-a32b"])
+def test_mixed_equals_split_across_archs_under_pressure(arch, smoke_setup):
+    """Acceptance: >=4 smoke archs (GQA, MLA, hybrid mamba, enc-dec, MoE),
+    each under a 1-block LRU budget that forces evictions, staggered so
+    prefill rides decode iterations — mixed == split, launch invariant
+    holds."""
+    cfg, params = smoke_setup(arch)
+    kw = dict(gen=3, arrivals=(0.0, 1e-4, 3e-3), hbm_blocks_per_request=1)
+    e_m, toks_m = _run(cfg, params, (48, 64, 72), **kw)
+    _, toks_s = _run(cfg, params, (48, 64, 72), hybrid_plane="split", **kw)
+    assert toks_m == toks_s
+    assert all(len(t) == 3 for t in toks_m)
+    pa.assert_mixed_launch_invariant(e_m)
+
+
+def test_mixed_under_pressure_really_evicts(smoke_setup):
+    """The pressure runs exercise the LRU: evictions and H2D reload misses
+    happen inside mixed iterations, and generation still completes."""
+    cfg, params = smoke_setup("qwen2-0.5b")
+    e_m, toks = _run(cfg, params, (64, 64, 64), gen=8,
+                     hbm_blocks_per_request=1)
+    assert all(len(t) == 8 for t in toks)
+    s = e_m.transfer_stats()
+    assert s.evictions > 0 and s.misses > 0 and s.h2d_calls > 0
+    assert any(e["layers"] for e in e_m.mixed_iter_log)
+    pa.assert_mixed_launch_invariant(e_m)
+
+
+def test_whisper_two_decode_groups_share_one_walk(smoke_setup):
+    """Unequal encoder KV shapes split decode into two planes; the mixed
+    iteration carries BOTH through one layer walk (decode_planes == 2 in
+    the log) and still matches split."""
+    cfg, params = smoke_setup("whisper-small")
+    kw = dict(prompts=(48, 48, 64), gen=3, enc_lens=(16, 16, 24),
+              max_inject_tokens=4096)
+    e_m, toks_m = _run(cfg, params, **kw)
+    _, toks_s = _run(cfg, params, hybrid_plane="split", **kw)
+    assert toks_m == toks_s
+    assert max(e["decode_planes"] for e in e_m.mixed_iter_log) == 2
+    pa.assert_mixed_launch_invariant(e_m)
+
+
+# ---------------------------------------------------------------------------
+# Sharded (PlaneMesh) — tier-1 model=1, CI multi-device model=8
+# ---------------------------------------------------------------------------
+
+def test_mixed_equals_split_sharded_model1(smoke_setup):
+    """Tier-1 sharded variant: a 1-way PlaneMesh goes through the sharded
+    code path on the single CPU device."""
+    cfg, params = smoke_setup("qwen2-0.5b")
+    kw = dict(gen=3, arrivals=(0.0, 1e-4, 3e-3), mesh_spec="model=1")
+    e_m, toks_m = _run(cfg, params, (48, 64, 72), **kw)
+    _, toks_s = _run(cfg, params, (48, 64, 72), hybrid_plane="split", **kw)
+    assert toks_m == toks_s
+    pa.assert_mixed_launch_invariant(e_m)
+
+
+@needs_multi
+def test_mixed_equals_split_sharded_model8(smoke_setup):
+    """Acceptance (multi-device CI): 8-way tensor-sharded mixed iteration
+    under eviction pressure still matches split exactly."""
+    cfg, params = smoke_setup("qwen2-0.5b")
+    kw = dict(gen=3, arrivals=(0.0, 1e-4, 3e-3), mesh_spec="model=8",
+              hbm_blocks_per_request=1)
+    e_m, toks_m = _run(cfg, params, (48, 64, 72), **kw)
+    _, toks_s = _run(cfg, params, (48, 64, 72), hybrid_plane="split", **kw)
+    assert toks_m == toks_s
+    pa.assert_mixed_launch_invariant(e_m)
+
+
+# ---------------------------------------------------------------------------
+# Launches stay O(L), independent of rows
+# ---------------------------------------------------------------------------
+
+def test_launches_independent_of_row_count(smoke_setup):
+    """Acceptance: per-iteration jitted-launch totals are identical for 1
+    and 4 requests on the same plan — bucketed batching, not per-row
+    loops (the invariant fixture's formula, measured end to end)."""
+    cfg, params = smoke_setup("qwen2-0.5b")
+
+    def launch_seq(n):
+        eng, toks = _run(cfg, params, (64,) * n,
+                         prefill_max_tokens_per_step=32,
+                         max_inject_tokens=4096)
+        assert all(len(t) == 3 for t in toks)
+        pa.assert_mixed_launch_invariant(eng)
+        return [e["launches"] for e in eng.mixed_iter_log]
+
+    seq4, seq1 = launch_seq(4), launch_seq(1)
+    assert seq4 == seq1
+
+
+# ---------------------------------------------------------------------------
+# Randomized interleaved arrival schedules (>= 25 in tier-1)
+# ---------------------------------------------------------------------------
+
+PROMPT_CHOICES = (24, 48, 64)
+ARRIVAL_CHOICES = (0.0, 1e-6, 1e-4, 3e-3)
+CAP_CHOICES = (1, 96)                   # eviction pressure | roomy pool
+
+
+def _schedule_equiv(cfg, params, schedule):
+    """mixed == split == sequential over one randomized schedule, plus the
+    launch invariant on the mixed run."""
+    prompts, gen, arrivals, cap = schedule
+    kw = dict(gen=gen, arrivals=arrivals, hbm_blocks_per_request=cap,
+              prefill_max_tokens_per_step=32)
+    e_m, t_m = _run(cfg, params, prompts, **kw)
+    assert e_m.eng.hybrid_plane == "mixed"
+    _, t_s = _run(cfg, params, prompts, hybrid_plane="split", **kw)
+    _, t_q = _run(cfg, params, prompts, batched_decode=False, **kw)
+    assert t_m == t_s == t_q, schedule
+    # engine floor: the prefill-sampled token plus >= 1 decode step
+    assert all(len(t) == max(gen, 2) for t in t_m), schedule
+    assert all(st.req.phase == Phase.FINISHED
+               for st in e_m.states.values()), schedule
+    pa.assert_mixed_launch_invariant(e_m)
+
+
+def _draw_schedule(rng):
+    """Mixed prompt lengths, staggered admissions mid-decode, finishes
+    mid-prefill (short gens + late arrivals), eviction-pressure caps."""
+    n = int(rng.integers(1, 4))
+    prompts = tuple(int(rng.choice(PROMPT_CHOICES)) for _ in range(n))
+    gen = int(rng.integers(1, 4))
+    arrivals = tuple(float(rng.choice(ARRIVAL_CHOICES)) for _ in range(n))
+    cap = int(rng.choice(CAP_CHOICES))
+    return prompts, gen, arrivals, cap
+
+
+def test_randomized_schedules_seeded(smoke_setup):
+    """Acceptance: >= 25 randomized interleaved schedules inside the
+    tier-1 budget.  Seeded np.random harness so it ALWAYS runs; the
+    hypothesis property below shrinks failures where hypothesis is
+    installed."""
+    cfg, params = smoke_setup("qwen2-0.5b")
+    rng = np.random.default_rng(2026)
+    for _ in range(25):
+        _schedule_equiv(cfg, params, _draw_schedule(rng))
+
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=25, deadline=None)
+    @given(data=hst.data())
+    def test_randomized_schedules_hypothesis(data, smoke_setup):
+        cfg, params = smoke_setup("qwen2-0.5b")
+        n = data.draw(hst.integers(1, 3))
+        schedule = (
+            tuple(data.draw(hst.sampled_from(PROMPT_CHOICES))
+                  for _ in range(n)),
+            data.draw(hst.integers(1, 3)),
+            tuple(data.draw(hst.sampled_from(ARRIVAL_CHOICES))
+                  for _ in range(n)),
+            data.draw(hst.sampled_from(CAP_CHOICES)),
+        )
+        _schedule_equiv(cfg, params, schedule)

@@ -166,3 +166,108 @@ def test_hybrid_ws_estimates_count_attention_layers_only():
         estimate_prefill_ws_bytes(g_full, 128, "layer_segmented")
     assert estimate_prefill_ws_bytes(g_full, 128, "chunked") == \
         2 * estimate_prefill_ws_bytes(g_full, 128, "layer_segmented")
+
+
+# ---------------------------------------------------------------------------
+# Working-set arbitration for the MIXED iteration (Algorithm 1 over both
+# phases of one hybrid batch): decode rows claim HBM first, the prefill
+# watermark takes what remains — both sides from estimate_*_ws_bytes
+# ---------------------------------------------------------------------------
+
+def _mk_mixed_sched(m_avl, g, num_attn_layers=None, r_max=8):
+    from repro.core.scheduler import Scheduler, SchedulerConfig
+    return Scheduler(SchedulerConfig(
+        r_max=r_max, m_avl_bytes=m_avl, max_inject_tokens=1024,
+        ws_control=True), g, num_layers=g.num_layers, top_k_blocks=8,
+        num_attn_layers=num_attn_layers)
+
+
+def test_mixed_plan_reports_both_ws_claims():
+    """A mixed BatchPlan carries the arbitration record: ws_decode_bytes
+    is exactly the admitted decode rows' estimates, ws_prefill_bytes the
+    admitted prefill rows' watermark estimates, and their sum held under
+    m_avl (what the hybrid plane's controller arbitrated)."""
+    from repro.serving.request import Phase, Request
+
+    g = geom(layers=2)
+    per_lb = g.block_bytes_per_head * g.num_kv_heads
+    cold = 8 * 2 * per_lb                    # cold decode WS (top-k x layers)
+    s = _mk_mixed_sched(m_avl=1 << 30, g=g)
+    dec = Request(prompt_len=64, max_new_tokens=8)
+    dec.phase = Phase.DECODE
+    s.running.append(dec)
+    pre = Request(prompt_len=128, max_new_tokens=8)
+    s.add_request(pre)
+    plan = s.schedule()
+    assert [r.req_id for r in plan.decode_reqs] == [dec.req_id]
+    assert [r.req_id for r, _ in plan.prefill_reqs] == [pre.req_id]
+    assert plan.ws_decode_bytes == s._estimate_ws(dec) == cold
+    assert plan.ws_prefill_bytes == s._estimate_ws(pre)
+    assert (plan.ws_decode_bytes + plan.ws_prefill_bytes
+            <= s.cfg.m_avl_bytes)
+
+
+def test_mixed_arbitration_decode_first_prefill_takes_rest():
+    """With m_avl sized for the decode row plus ONE layer-segmented
+    prefill watermark, decode is admitted first and exactly one of two
+    waiting prefills fits; halving m_avl below the decode claim empties
+    the whole mixed batch (batch-size control, Fig. 1)."""
+    from repro.core.working_set import estimate_prefill_ws_bytes
+    from repro.serving.request import Phase, Request
+
+    g = geom(layers=2)
+    per_lb = g.block_bytes_per_head * g.num_kv_heads
+    cold = 8 * 2 * per_lb
+    pre_ws = estimate_prefill_ws_bytes(g, 128, "layer_segmented")
+
+    def build(m_avl):
+        s = _mk_mixed_sched(m_avl=m_avl, g=g)
+        dec = Request(prompt_len=64, max_new_tokens=8)
+        dec.phase = Phase.DECODE
+        s.running.append(dec)
+        for _ in range(2):
+            s.add_request(Request(prompt_len=128, max_new_tokens=8))
+        return s, s.schedule()
+
+    s, plan = build(cold + pre_ws)
+    assert len(plan.decode_reqs) == 1
+    assert len(plan.prefill_reqs) == 1       # second prefill rejected
+    assert plan.rejected == 1
+    assert plan.ws_decode_bytes == cold
+    assert plan.ws_prefill_bytes == pre_ws
+    _, starved = build(cold - 1)             # decode WS alone doesn't fit
+    assert not starved.decode_reqs
+    assert starved.ws_decode_bytes == 0
+
+
+def test_mixed_arbitration_hybrid_attn_layer_scaling():
+    """The same mixed workload admits MORE under a hybrid (jamba-style)
+    attention-layer count: halving num_attn_layers halves the decode
+    cold-start claim, so a prefill that was rejected now fits (the PR 3
+    scaling, now visible through the plan's arbitration record)."""
+    from repro.serving.request import Phase, Request
+
+    g = geom(layers=2)
+    per_lb = g.block_bytes_per_head * g.num_kv_heads
+
+    from repro.core.working_set import estimate_prefill_ws_bytes
+    pre_ws = estimate_prefill_ws_bytes(g, 4, "layer_segmented",
+                                       num_attn_layers=1)
+
+    def build(num_attn_layers):
+        # fits the 1-attn-layer cold decode claim + the small prefill, but
+        # NOT the full-depth cold claim
+        s = _mk_mixed_sched(m_avl=8 * 1 * per_lb + pre_ws, g=g,
+                            num_attn_layers=num_attn_layers)
+        dec = Request(prompt_len=64, max_new_tokens=8)
+        dec.phase = Phase.DECODE
+        s.running.append(dec)
+        s.add_request(Request(prompt_len=4, max_new_tokens=8))
+        return s.schedule()
+
+    full = build(2)                          # cold claim 8*2 blocks > m_avl
+    assert not full.decode_reqs and full.rejected >= 1
+    hybrid = build(1)                        # cold claim 8*1 blocks fits
+    assert len(hybrid.decode_reqs) == 1
+    assert hybrid.ws_decode_bytes == 8 * 1 * per_lb
+    assert hybrid.ws_prefill_bytes > 0       # leftover admits the prefill

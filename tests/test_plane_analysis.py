@@ -49,6 +49,21 @@ def test_cli_exit_codes():
     assert main(["--list-fixtures"]) == 0
 
 
+def test_real_hybrid_driver_clean():
+    """The REAL mixed-iteration driver (hybrid_plane.HybridPlane plus the
+    engine's spliced layer_cb) passes the stage-protocol pass unwaived,
+    with ALL FIVE pass-1 rules active for the 'hybrid-plane' protocol —
+    the static counterpart of assert_mixed_launch_invariant."""
+    assert set(pc.PROTOCOL_RULES["hybrid-plane"]) == {
+        pc.RULE_RESTORE_BEFORE_USE, pc.RULE_WRITEBACK_BEFORE_DROP,
+        pc.RULE_FUSED_TRANSFER, pc.RULE_CTX_LIFETIME, pc.RULE_LAUNCHES}
+    drivers = tuple(d for d in pc.DEFAULT_DRIVERS
+                    if d.protocol == "hybrid-plane")
+    assert drivers, "hybrid driver missing from the contract"
+    target = pc.AnalysisTarget(name="hybrid-only", drivers=drivers)
+    assert analyze(target) == []
+
+
 def test_real_tree_clean(smoke_setup):
     """Full three-pass run over the real tree: zero UNWAIVED findings —
     and the legacy per-request saves are visibly waived, not silently

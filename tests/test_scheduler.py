@@ -88,6 +88,39 @@ def test_admission_bounded_by_m_avl(n_dec, n_wait, m_avl_blocks, seed):
     assert used <= m_avl
 
 
+@given(n_dec=st.integers(0, 10), n_wait=st.integers(0, 6),
+       m_avl_blocks=st.integers(1, 200), seed=st.integers(0, 99))
+@settings(**SET)
+def test_mixed_plan_arbitration_record_is_exact(n_dec, n_wait, m_avl_blocks,
+                                                seed):
+    """The mixed iteration's arbitration record: ws_decode_bytes /
+    ws_prefill_bytes are exactly the admitted rows' estimate_*_ws_bytes
+    sums, and their total is what Algorithm 1 held under M_avl."""
+    g = geom()
+    per_lb = g.block_bytes_per_head * g.num_kv_heads
+    s = mk_sched(m_avl=m_avl_blocks * per_lb)
+    rng = np.random.default_rng(seed)
+    for _ in range(n_dec):
+        r = Request(prompt_len=64, max_new_tokens=32)
+        r.phase = Phase.DECODE
+        s.running.append(r)
+        sel = [(l, int(b)) for l in range(4)
+               for b in rng.integers(0, 8, size=rng.integers(1, 6))]
+        s.observe_selection(r, sel)
+    for _ in range(n_wait):
+        s.add_request(Request(prompt_len=128, max_new_tokens=8))
+    plan = s.schedule()
+    assert plan.ws_decode_bytes == sum(s._estimate_ws(r)
+                                       for r in plan.decode_reqs)
+    assert plan.ws_prefill_bytes == sum(s._estimate_ws(r)
+                                        for r, _ in plan.prefill_reqs)
+    assert (plan.ws_decode_bytes + plan.ws_prefill_bytes
+            <= s.cfg.m_avl_bytes)
+    if plan.rejected == 0 and not s.waiting:
+        # nothing was cut: the record covers the whole candidate batch
+        assert len(plan.decode_reqs) == min(n_dec, s.cfg.r_max)
+
+
 def test_ws_control_off_admits_everything_within_rmax():
     s = mk_sched(m_avl=0, ws=False, r_max=4)
     for _ in range(6):

@@ -60,6 +60,14 @@ FIXTURES = {
         _driver_target("bad_double_d2h", "bad_double_d2h.py",
                        "BadPlane.step", "staged-decode"),
         pc.RULE_FUSED_TRANSFER),
+    "bad_mixed_double_stage": (
+        _driver_target("bad_mixed_double_stage",
+                       "bad_mixed_double_stage.py",
+                       "BadHybrid.run_iteration", "hybrid-plane",
+                       callbacks=(pc.CallbackSpec(
+                           "layer_cb", f"{_FX}/bad_mixed_double_stage.py",
+                           "mixed_layer_cb"),)),
+        pc.RULE_FUSED_TRANSFER),
     "bad_ctx_after_window": (
         _driver_target("bad_ctx_after_window", "bad_ctx_after_window.py",
                        "BadPrefill.run_iteration", "prefill-plane",

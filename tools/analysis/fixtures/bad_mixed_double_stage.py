@@ -1,0 +1,23 @@
+"""Seeded violation: a SECOND per-layer host stage in a mixed iteration —
+the hybrid-plane protocol fuses decode write-back and the layer's fresh
+prefill KV into ONE FlashD2H save (and at most one FlashH2D load +
+restore round) per layer window; running the host stage twice doubles
+every transfer.  Analyzed as source only; never imported."""
+
+
+def mixed_layer_cb(host, i, sel):
+    # the one per-layer host stage: merged save, merged load, restore
+    host.save_new_tokens_fused(i, sel)
+    host.load_blocks_fused(i, sel)
+    host.restore_blocks_fused(i, sel, before_use=True)
+
+
+class BadHybrid:
+    def run_iteration(self, params, fns, host, layer_cb):
+        x = fns.embed(params, None)
+        for i in range(4):
+            sel = fns.select(params, x)
+            layer_cb(host, i, sel)
+            layer_cb(host, i, sel)    # second host stage, same layer window
+            x = fns.attend(params, x, sel)
+        return fns.logits(params, x)

@@ -246,7 +246,7 @@ def check_driver(repo_root: Path, driver: pc.DriverSpec,
                      f"{e.call} with no preceding FlashD2H write-back in "
                      f"its window — dropped data would exist nowhere")
             if (e.kind == "drop" and e.stack
-                    and driver.protocol == "staged-decode"
+                    and driver.protocol in ("staged-decode", "hybrid-plane")
                     and "protect" not in e.kwargs):
                 flag(pc.RULE_WRITEBACK_BEFORE_DROP, e,
                      f"in-window {e.call} without protect= — blocks "
