@@ -48,6 +48,7 @@ from __future__ import annotations
 import bisect
 import dataclasses
 import os
+import time
 from typing import Any, Dict, List, Optional, Tuple
 
 import jax
@@ -131,10 +132,15 @@ class StageFns:
         self.shape_signatures: set = set()
         self.raw_fns: Dict[str, Any] = {}   # stage -> unjitted callable
         self.abstract_args: Dict[str, Tuple] = {}   # stage -> SDS pytree
+        self.donated: Dict[str, Tuple[int, ...]] = {}  # stage -> donate args
         self._donate_ok = jax.default_backend() != "cpu"
+        # whether donation is actually armed on this backend (CPU buffers
+        # are not donatable; declaring them would only warn per compile)
+        self.donate_active = self._donate_ok
 
     def wrap(self, stage, f, donate=()):
         self.raw_fns[stage] = f
+        self.donated[stage] = tuple(donate)
 
         def fn(*args):
             self.trace_count += 1           # trace-time side effect only
@@ -348,6 +354,15 @@ class DevicePoolPlane:
         self.blocks_restored = 0
         self.blocks_restored_before_use = 0   # landed before the attention
                                               # that selected them (staged)
+        self.host_syncs = 0              # async mode: per-layer np.asarray(
+                                         # selected ids) — the ONLY blocking
+                                         # sync the dispatch thread pays
+        self.d2h_readback_bytes = 0      # stripe bytes read back by
+                                         # new_token_kv[_async]: pins that
+                                         # write-back never copies pool-sized
+                                         # buffers to host
+        self.stage_timeline: List[Tuple[int, float, float]] = []
+        # last iteration's (layer, idx_sync_s, host_stage_s) per stage_cb
         # per-layer param slices for the staged pipeline, cached per params
         # OBJECT (the entry's strong ref keeps the id() stable).  Lives on
         # the plane — not the process-global _StagedDecodeFns — so retired
@@ -541,6 +556,7 @@ class DevicePoolPlane:
         enc_kvs = st["extra"].get("enc_kvs")
         prev = {rid: self.cur_host[rid] for rid in token_by_req}
         info: Dict[str, Any] = {"selected": {}}
+        timeline: List[Tuple[int, float, float]] = []
 
         x = fns.embed(params, tokens)
         for i in range(cfg.num_layers):
@@ -561,13 +577,22 @@ class DevicePoolPlane:
                 # the callback then scatters restores into caches[i].
                 # sel is None when DSA is off — the callback still runs
                 # (per-layer FlashD2H write-back), it just has no
-                # selections to stage.
-                stage_cb(i, None if idx is None else np.asarray(idx), prev)
+                # selections to stage.  In async mode the callback must
+                # not block on the device again (plane-contract rule
+                # no-sync-in-dispatch-window); the wall-clock split
+                # between the idx sync and the host stage is recorded so
+                # bench_overlap can report ACHIEVED overlap.
+                t0 = time.perf_counter()
+                sel = None if idx is None else np.asarray(idx)
+                t1 = time.perf_counter()
+                stage_cb(i, sel, prev)
+                timeline.append((i, t1 - t0, time.perf_counter() - t1))
             x = fns.attend(layer_params[i], x, q, st["caches"][i],
                            st["cur_len"], idx, valid,
                            M.index_enc_kvs(enc_kvs, i))
         logits, new_len = fns.logits(params, x, st["cur_len"], mask)
         st["cur_len"] = new_len
+        self.stage_timeline = timeline
         self.buckets_seen.add((self.b_cap, self.nb_cap))
         self.steps += 1
         for rid in token_by_req:
@@ -591,16 +616,34 @@ class DevicePoolPlane:
         ordered like `req_ids`.  ``layers`` restricts the readback to a
         subset of pool layers — the staged plane saves layer *l* right after
         its select stage (and before its restores), one layer at a time."""
+        return {l: (np.asarray(k), None if v is None else np.asarray(v))
+                for l, (k, v) in self.new_token_kv_async(
+                    req_ids, prev_lens, layers).items()}
+
+    def new_token_kv_async(self, req_ids: List[str],
+                           prev_lens: Dict[str, int],
+                           layers: Optional[List[int]] = None
+                           ) -> Dict[int, Tuple[jax.Array,
+                                                Optional[jax.Array]]]:
+        """Dispatch the appended-KV stripe gathers WITHOUT a host sync:
+        same mapping as ``new_token_kv`` but the values are DEVICE arrays
+        (the gather is queued behind this layer's select stage).  Convert
+        with ``np.asarray`` off-thread (``HostStageWorker``) — JAX's value
+        semantics guarantee the queued gather reads the pool value as of
+        dispatch, so later pool-updating stages cannot corrupt the stripe
+        even though they reuse (donated) pool buffers."""
         bs = self.cfg.dsa.block_size
         rows = jnp.asarray([self.rows[r] for r in req_ids], jnp.int32)
         pos = np.asarray([prev_lens[r] for r in req_ids], np.int64)
         blk = jnp.asarray(pos // bs, jnp.int32)
         slot = jnp.asarray(pos % bs, jnp.int32)
-        out: Dict[int, Tuple[np.ndarray, Optional[np.ndarray]]] = {}
+        out: Dict[int, Tuple[jax.Array, Optional[jax.Array]]] = {}
         for l in (self.pool_layers() if layers is None else layers):
             c = self.state["caches"][l]
-            k = np.asarray(c["k"][rows, :, blk, slot])        # (R, Hkv, D)
-            v = np.asarray(c["v"][rows, :, blk, slot]) if "v" in c else None
+            k = c["k"][rows, :, blk, slot]                    # (R, Hkv, D)
+            v = c["v"][rows, :, blk, slot] if "v" in c else None
+            self.d2h_readback_bytes += k.nbytes + (
+                0 if v is None else v.nbytes)
             out[l] = (k, v)
         return out
 

@@ -46,6 +46,7 @@ the cache-hit invariant of both underlying registries covers it.
 from __future__ import annotations
 
 import dataclasses
+import time
 from typing import Any, Dict, List, Optional, Tuple
 
 import jax
@@ -157,6 +158,8 @@ class HybridPlane:
     def __init__(self, cfg):
         self.cfg = cfg
         self.iterations = 0
+        self.stage_timeline: List[Tuple[int, float, float]] = []
+        # last iteration's (layer, idx_sync_s, host_stage_s) per layer_cb
 
     def run_iteration(self, params: Dict, decode_jobs: List[DecodeJob],
                       prefill_jobs: List[PrefillJob],
@@ -187,9 +190,11 @@ class HybridPlane:
         pre: List[Tuple[PrefillPlane, PrefillWalk]] = []
         for pj in prefill_jobs:
             pre.append((pj.plane, pj.plane.begin_iteration(pj.allowance)))
+        timeline: List[Tuple[int, float, float]] = []
         for i in range(cfg.num_layers):
             kind = M.layer_kind(cfg, i)
             selections: List[Tuple[DecodeRun, Optional[np.ndarray]]] = []
+            t_sync = 0.0
             if kind == "attn":
                 for d in dec:
                     st = d.plane.state
@@ -203,8 +208,10 @@ class HybridPlane:
                     # np.asarray(idx) is the ONLY host sync per layer (same
                     # as step_staged): it forces select_i — and the still-
                     # queued attend_{i-1} — before the host stage runs
+                    t0 = time.perf_counter()
                     selections.append(
                         (d, None if idx is None else np.asarray(idx)))
+                    t_sync += time.perf_counter() - t0
             else:
                 for d in dec:
                     st = d.plane.state
@@ -216,9 +223,11 @@ class HybridPlane:
                 for g in plane.run_layer(params, i, walk):
                     layer_groups.append((plane, g))
             if layer_cb is not None and (selections or layer_groups):
+                t1 = time.perf_counter()
                 layer_cb(LayerWindow(layer=i, kind=kind,
                                      selections=selections,
                                      groups=layer_groups))
+                timeline.append((i, t_sync, time.perf_counter() - t1))
             if kind == "attn":
                 for d in dec:
                     st = d.plane.state
@@ -226,6 +235,7 @@ class HybridPlane:
                                        st["caches"][i], st["cur_len"],
                                        d.idx, d.valid,
                                        M.index_enc_kvs(d.enc_kvs, i))
+        self.stage_timeline = timeline
         out_dec = []
         for d in dec:
             st = d.plane.state

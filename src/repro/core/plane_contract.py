@@ -51,6 +51,7 @@ RULE_WRITEBACK_BEFORE_DROP = "writeback-before-drop"
 RULE_FUSED_TRANSFER = "fused-transfer"
 RULE_CTX_LIFETIME = "ctx-lifetime"
 RULE_LAUNCHES = "launches-per-iteration"
+RULE_NO_SYNC_IN_DISPATCH_WINDOW = "no-sync-in-dispatch-window"
 # pass 2 — retrace hazards
 RULE_TRACED_BRANCH = "traced-branch"
 RULE_TRACER_COERCION = "tracer-coercion"
@@ -64,6 +65,7 @@ RULE_SHARDING_LEAK = "sharding-leak"
 ALL_RULES = (
     RULE_RESTORE_BEFORE_USE, RULE_WRITEBACK_BEFORE_DROP,
     RULE_FUSED_TRANSFER, RULE_CTX_LIFETIME, RULE_LAUNCHES,
+    RULE_NO_SYNC_IN_DISPATCH_WINDOW,
     RULE_TRACED_BRANCH, RULE_TRACER_COERCION, RULE_NP_IN_JIT,
     RULE_UNHASHABLE_KEY, RULE_KEY_MISSING_FIELD,
     RULE_COLLECTIVE, RULE_SHARDING_LEAK,
@@ -109,10 +111,24 @@ EFFECT_OF_CALL: Dict[str, Tuple[str, str]] = {
     "drop_blocks": ("drop", "direct"),
     "_drop_pending_evictions": ("drop", "deferred"),
     "drop_layer": ("layer-evict", ""),
-    # readbacks
+    # readbacks.  sub "" = BLOCKING (np.asarray inside), "async" = the
+    # dispatch-only variant (returns device arrays / a finisher for the
+    # HostStageWorker), "view" = a device-slice view with no transfer
     "new_token_kv": ("pool-read", ""),
+    "new_token_kv_async": ("pool-read", "async"),
     "read_group_kv": ("ctx-read", ""),
-    "layer_ctx": ("ctx-read", ""),
+    "read_group_kv_async": ("ctx-read", "async"),
+    "layer_ctx": ("ctx-read", "view"),
+    # async write-back staging: the fused FlashD2H is DISPATCHED here (the
+    # conversion + save_new_tokens_fused run on the host-stage worker); for
+    # ordering rules it sequences exactly like the sync fused save
+    "_stage_writeback_async": ("d2h", "fused"),
+    "_stage_writeback_async_merged": ("d2h", "fused"),
+    # explicit host-blocking device syncs — forbidden inside an async
+    # dispatch window (RULE_NO_SYNC_IN_DISPATCH_WINDOW)
+    "asarray": ("sync", "host"),
+    "block_until_ready": ("sync", "host"),
+    "device_get": ("sync", "host"),
 }
 
 # ---------------------------------------------------------------------------
@@ -161,6 +177,20 @@ PROTOCOL_RULES: Dict[str, Tuple[str, ...]] = {
     # rules apply together — every pass-1 rule covers this driver
     "hybrid-plane": (RULE_RESTORE_BEFORE_USE, RULE_WRITEBACK_BEFORE_DROP,
                      RULE_FUSED_TRANSFER, RULE_CTX_LIFETIME, RULE_LAUNCHES),
+    # the ASYNC dispatch windows (stage_dispatch="async", the default):
+    # the base window rules still hold — the d2h is dispatched in the
+    # same order, fenced at the gather — PLUS nothing in the callback may
+    # block on the device (the driver's np.asarray(idx) is the one
+    # allowed per-layer sync, and it happens before the callback runs)
+    "staged-decode-async": (RULE_RESTORE_BEFORE_USE,
+                            RULE_WRITEBACK_BEFORE_DROP,
+                            RULE_FUSED_TRANSFER, RULE_LAUNCHES,
+                            RULE_NO_SYNC_IN_DISPATCH_WINDOW),
+    "hybrid-plane-async": (RULE_RESTORE_BEFORE_USE,
+                           RULE_WRITEBACK_BEFORE_DROP,
+                           RULE_FUSED_TRANSFER, RULE_CTX_LIFETIME,
+                           RULE_LAUNCHES,
+                           RULE_NO_SYNC_IN_DISPATCH_WINDOW),
     # fused decode plane: transfers are per-layer fused, but restores land
     # after the forward (restore-before-use deliberately does NOT apply;
     # that is exactly why drop_evicted_device_blocks needs the staged plane)
@@ -179,7 +209,17 @@ DEFAULT_DRIVERS: Tuple[DriverSpec, ...] = (
         protocol="staged-decode",
         callbacks=(CallbackSpec(
             "stage_cb", "src/repro/serving/engine.py",
-            "ServingEngine._decode_batch_staged.stage_cb"),),
+            "ServingEngine._decode_batch_staged.stage_cb_sync"),),
+        batch_iterables=("token_by_req", "req_ids", "sts", "rids"),
+    ),
+    DriverSpec(
+        name="staged-decode-async",
+        file="src/repro/core/device_pool.py",
+        qualname="DevicePoolPlane.step_staged",
+        protocol="staged-decode-async",
+        callbacks=(CallbackSpec(
+            "stage_cb", "src/repro/serving/engine.py",
+            "ServingEngine._decode_batch_staged.stage_cb_async"),),
         batch_iterables=("token_by_req", "req_ids", "sts", "rids"),
     ),
     DriverSpec(
@@ -206,7 +246,18 @@ DEFAULT_DRIVERS: Tuple[DriverSpec, ...] = (
         protocol="hybrid-plane",
         callbacks=(CallbackSpec(
             "layer_cb", "src/repro/serving/engine.py",
-            "ServingEngine._mixed_iteration.layer_cb"),),
+            "ServingEngine._mixed_iteration.layer_cb_sync"),),
+        batch_iterables=("token_by_req", "req_ids", "rids", "sts",
+                         "allow"),
+    ),
+    DriverSpec(
+        name="hybrid-plane-async",
+        file="src/repro/core/hybrid_plane.py",
+        qualname="HybridPlane.run_iteration",
+        protocol="hybrid-plane-async",
+        callbacks=(CallbackSpec(
+            "layer_cb", "src/repro/serving/engine.py",
+            "ServingEngine._mixed_iteration.layer_cb_async"),),
         batch_iterables=("token_by_req", "req_ids", "rids", "sts",
                          "allow"),
     ),
@@ -371,6 +422,30 @@ def mixed_launches_per_iteration(cfg, n_decode_planes: int, n_groups: int,
     against the engine's measured ``mixed_iter_log``."""
     return (n_decode_planes * staged_launches_per_iteration(cfg)
             + n_groups + n_finalize_planes)
+
+
+def staged_host_syncs_per_iteration(cfg) -> int:
+    """Blocking device->host syncs ONE async staged decode iteration is
+    allowed on the dispatch thread: exactly the np.asarray of the
+    selection tensor, once per attention layer (zero with DSA off — then
+    there is nothing to stage).  Everything else (stripe conversion, DRAM
+    staging) runs on the HostStageWorker; the logits readback at sampling
+    happens after the iteration's drain and is not a per-layer cost.
+    ``tests/planeasserts.assert_host_sync_invariant`` checks the planes'
+    measured ``host_syncs`` counters against this."""
+    return cfg.num_attention_layers() if cfg.dsa.enabled else 0
+
+
+# pool-updating stages that must DECLARE buffer donation (donate_argnums
+# on the pool/cache argument) so XLA reuses the buffer in place on
+# accelerator backends instead of copying a pool per layer per iteration.
+# tests/planeasserts.assert_donation_contract checks a live registry's
+# StageFns.donated against this.
+STAGED_DONATED_STAGES: Dict[str, Tuple[int, ...]] = {
+    "select": (2,),             # consumes + returns the layer pool cache
+    "recurrent-mamba": (2,),    # consumes + returns the recurrent state
+    "recurrent-rwkv": (2,),
+}
 
 
 def staged_stage_kinds(cfg) -> int:

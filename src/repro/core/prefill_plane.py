@@ -565,6 +565,36 @@ class PrefillPlane:
             out[rid] = (k, v)
         return out
 
+    def read_group_kv_async(self, g: PrefillGroupRun):
+        """Dispatch the group's fused KV stripe gather WITHOUT a host sync
+        and return a zero-arg *finisher*.  The gather (a queued device op
+        on value-snapshotted ctx buffers) starts immediately; calling the
+        finisher — on the ``HostStageWorker`` — pays the blocking
+        ``np.asarray`` plus the per-request trim/transpose and returns
+        exactly what ``read_group_kv`` would have."""
+        rows = jnp.asarray([self.rows[r] for r in g.req_ids], jnp.int32)
+        sl = slice(g.chunk_start, g.chunk_start + g.chunk_cap)
+        k_dev = self.ctx_k[rows, sl]
+        v_dev = self.ctx_v[rows, sl] if self.ctx_v is not None else None
+        req_ids = list(g.req_ids)
+        chunk_lens = {rid: g.segs[rid].chunk_len for rid in req_ids}
+
+        def finish() -> Dict[str, Tuple[np.ndarray, Optional[np.ndarray]]]:
+            k_all = np.asarray(k_dev)
+            v_all = None if v_dev is None else np.asarray(v_dev)
+            out: Dict[str, Tuple[np.ndarray, Optional[np.ndarray]]] = {}
+            for i, rid in enumerate(req_ids):
+                clen = chunk_lens[rid]
+                if k_all.ndim == 3:                # MLA latent: (R, T, lat)
+                    k = k_all[i, :clen][None, :, :]
+                    v = None
+                else:                              # (R, T, Hkv, hd)
+                    k = np.transpose(k_all[i, :clen], (1, 0, 2))
+                    v = np.transpose(v_all[i, :clen], (1, 0, 2))
+                out[rid] = (k, v)
+            return out
+        return finish
+
     def layer_ctx(self, req_id: str) -> Tuple:
         """The request's completed CURRENT-layer KV (kv_out form, B=1) —
         what the engine turns into the layer's paged decode pool at the end

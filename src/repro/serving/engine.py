@@ -66,6 +66,7 @@ import numpy as np
 
 from repro.core import dsa as dsa_mod
 from repro.core.device_pool import BucketingPolicy, DevicePoolPlane
+from repro.core.host_stage import HostStageWorker
 from repro.core.hybrid_plane import (DecodeJob, HybridPlane, LayerWindow,
                                      PrefillJob)
 from repro.core.kv_cache import KVCacheManager, KVGeometry, TransferStats
@@ -164,6 +165,25 @@ class EngineConfig:
                                              # chunked prefill, non-staged
                                              # or unbatched decode) resolve
                                              # to "split" automatically.
+    stage_dispatch: str = "async"            # "async" (default): the
+                                             # per-layer host stage hands
+                                             # the FlashD2H write-back to a
+                                             # HostStageWorker thread and
+                                             # never blocks the dispatch
+                                             # thread on the device beyond
+                                             # np.asarray(selected ids) —
+                                             # attend(l) / select(l+1)
+                                             # dispatch while layer l's
+                                             # stripe conversion + DRAM
+                                             # staging run off-thread,
+                                             # fenced before any gather of
+                                             # the same layer and drained
+                                             # before sampling; "sync": the
+                                             # fully blocking host stage,
+                                             # kept as the equivalence
+                                             # oracle (async must be
+                                             # greedy-token-identical).
+                                             # See docs/architecture.md §10.
     drop_evicted_device_blocks: Optional[bool] = None
     # True: HBM-evicted blocks are physically zeroed on device and restored
     # from the host pool via the fused H2D gather when re-selected.  On the
@@ -232,6 +252,10 @@ class ServingEngine:
         if eng.hybrid_plane not in ("mixed", "split"):
             raise ValueError(f"unknown hybrid_plane {eng.hybrid_plane!r}; "
                              f"expected 'mixed' or 'split'")
+        if eng.stage_dispatch not in ("async", "sync"):
+            raise ValueError(f"unknown stage_dispatch "
+                             f"{eng.stage_dispatch!r}; "
+                             f"expected 'async' or 'sync'")
         if eng.hybrid_plane == "mixed" and not (
                 eng.batched_decode and eng.decode_plane == "staged"
                 and eng.prefill_mode == "layer_segmented"
@@ -313,6 +337,11 @@ class ServingEngine:
         self.admit_embed_launches = 0            # batched admission embeds
         self.hybrid = (HybridPlane(cfg)
                        if eng.hybrid_plane == "mixed" else None)
+        # async dispatch pipeline (stage_dispatch="async", the default):
+        # per-layer FlashD2H write-back staging runs on this worker so the
+        # dispatch thread's only per-layer device block is np.asarray(idx)
+        self._stage_async = eng.stage_dispatch == "async"
+        self._worker: Optional[HostStageWorker] = None
         self.mixed_iter_log: List[Dict[str, Any]] = []
         # per mixed iteration: per-layer fused d2h/h2d call counts, group
         # counts and the measured jitted-launch total — what
@@ -845,14 +874,16 @@ class ServingEngine:
             "prefill_rows": len(plan.prefill_reqs),
             "groups": 0, "finalize": 0, "launches": 0}
 
-        def layer_cb(win: LayerWindow) -> None:
-            lidx = (self._attn_layer_index(win.layer)
-                    if win.kind == "attn" else -1)
+        worker = self._stage_worker() if self._stage_async else None
+
+        def _layer_log_and_budget(win: LayerWindow, lidx: int) -> Dict:
+            """Shared pure-host head of both layer callbacks: the
+            per-layer log entry, modeled prefill launch cost, and the
+            prefill token-budget spend."""
             lay_log = {"d2h": 0, "h2d": 0, "groups": len(win.groups),
                        "attn": win.kind == "attn",
                        "decode": bool(win.selections)}
             entry["layers"][win.layer] = lay_log
-            # prefill launch cost + budget accounting (attn and recurrent)
             for plane, g in win.groups:
                 n_shards, ag_bytes = 1, 0
                 if (self.plane_mesh is not None and g.kind == "attn"
@@ -870,6 +901,12 @@ class ServingEngine:
                 self.prefill_launches += 1
                 for rid in g.req_ids:
                     spent[rid] = spent.get(rid, 0) + g.segs[rid].chunk_len
+            return lay_log
+
+        def layer_cb_sync(win: LayerWindow) -> None:
+            lidx = (self._attn_layer_index(win.layer)
+                    if win.kind == "attn" else -1)
+            lay_log = _layer_log_and_budget(win, lidx)
             # 1. ONE merged fused FlashD2H: decode write-back + fresh
             #    prefill-chunk KV of THIS layer, single save call
             kv_merge: Dict[str, Tuple[int, Any, Any]] = {}
@@ -966,14 +1003,128 @@ class ServingEngine:
                     if cache is not None:
                         cache.drop_layer(lidx)
 
+        def layer_cb_async(win: LayerWindow) -> None:
+            # The DISPATCH WINDOW (see stage_cb_async): no device sync
+            # beyond the selection arrays the driver already converted —
+            # counted here as this layer's allowed host syncs.
+            for d, sel in win.selections:
+                if sel is not None:
+                    d.plane.host_syncs += 1
+            lidx = (self._attn_layer_index(win.layer)
+                    if win.kind == "attn" else -1)
+            lay_log = _layer_log_and_budget(win, lidx)
+            with jax.transfer_guard_device_to_host("disallow"):
+                # 1. ONE merged fused FlashD2H per layer, staged on the
+                #    worker: dispatch every decode plane's stripe gather
+                #    and every prefill group's chunk gather, submit one
+                #    merging job (same single save_new_tokens_fused shape
+                #    as the sync path)
+                parts: List[Tuple] = []
+                finishers: List[Tuple] = []
+                for d, sel in win.selections:
+                    if not self.eng.decode_write_back:
+                        continue
+                    kv_dev = d.plane.new_token_kv_async(
+                        d.req_ids, d.prev, layers=[win.layer])[win.layer]
+                    parts.append((list(d.req_ids), dict(d.prev), kv_dev))
+                for plane, g in win.groups:
+                    if g.kind != "attn":
+                        continue
+                    finishers.append(
+                        (g.chunk_start, plane.read_group_kv_async(g)))
+                if parts or finishers:
+                    self._stage_writeback_async_merged(worker, lidx,
+                                                       parts, finishers)
+                    lay_log["d2h"] += 1
+                # 2. LRU per decode plane (dispatch thread: access order
+                #    stays byte-identical to sync), then at most ONE
+                #    merged FlashH2D behind the per-layer fence
+                merged_missing: Dict[str, List[int]] = {}
+                rounds = []
+                for d, sel in win.selections:
+                    if sel is None:
+                        continue
+                    blocks_by_req: Dict[str, List[int]] = {}
+                    for rid in d.req_ids:
+                        blocks = dsa_mod.selected_block_ids(
+                            sel[d.plane.rows[rid]])
+                        blocks_by_req[rid] = blocks
+                        sel_pairs[rid].extend((lidx, x) for x in blocks)
+                    missing_by_req, evicted_by_req = \
+                        self.kv_mgr.access_layer(lidx, blocks_by_req,
+                                                 drain_evicted=drop)
+                    pe = pending_evict[id(d.plane)]
+                    for rid, ev in evicted_by_req.items():
+                        pe[rid].update(ev)
+                    loads_total[0] += sum(len(m)
+                                          for m in missing_by_req.values())
+                    merged_missing.update(missing_by_req)
+                    rounds.append((d, blocks_by_req, missing_by_req))
+                if merged_missing:
+                    self._staged_layer_bytes[win.layer] = (
+                        self._staged_layer_bytes.get(win.layer, 0)
+                        + sum(len(m) for m in merged_missing.values())
+                        * per_block_bytes)
+                    # restore-before-use fence: this layer's outstanding
+                    # merged write-back must land in DRAM before gathering
+                    worker.fence(lidx)
+                    payloads = self.kv_mgr.load_blocks_fused(
+                        lidx, merged_missing)
+                    lay_log["h2d"] += 1
+                    if self.eng.decode_write_back:
+                        for d, _, missing_by_req in rounds:
+                            if missing_by_req:
+                                d.plane.restore_blocks_fused(
+                                    win.layer,
+                                    {rid: (missing_by_req[rid], k, v)
+                                     for rid, (k, v) in payloads.items()
+                                     if rid in missing_by_req},
+                                    before_use=True)
+                # 3. deferred eviction drop, per decode plane (the probe
+                #    runs outside the guard, below)
+                for d, blocks_by_req, _ in rounds:
+                    if drop:
+                        self._drop_pending_evictions(
+                            d.plane, [self.states[rid]
+                                      for rid in d.req_ids],
+                            pending_evict[id(d.plane)],
+                            protect=(lidx, blocks_by_req))
+                # 4. prefill end-of-layer: decode pool builds (device
+                #    slices only, no sync) + HBM layer eviction
+                for plane, g in win.groups:
+                    if g.kind != "attn":
+                        continue
+                    for rid in g.req_ids:
+                        if not g.segs[rid].is_last_chunk_of_layer:
+                            continue
+                        st_r = self.states[rid]
+                        pool_kv, _ = self._kv_to_layer_cache(
+                            st_r, plane.layer_ctx(rid))
+                        st_r.decode_state["caches"][g.layer] = pool_kv
+                        cache = self.kv_mgr.caches.get(rid)
+                        if cache is not None:
+                            cache.drop_layer(lidx)
+            if self.staged_probe is not None and rounds:
+                worker.fence(lidx)   # probes compare device vs host pools
+                for d, blocks_by_req, _ in rounds:
+                    self.staged_probe(self, d.plane, win.layer,
+                                      [self.states[rid]
+                                       for rid in d.req_ids],
+                                      blocks_by_req)
+
         involved: Dict[int, Any] = {}
         for job in decode_jobs:
             involved[id(job.plane.staged_fns)] = job.plane.staged_fns
         for pj in prefill_jobs:
             involved[id(pj.plane.fns)] = pj.plane.fns
         calls0 = sum(f.calls for f in involved.values())
-        res = self.hybrid.run_iteration(self.params, decode_jobs,
-                                        prefill_jobs, layer_cb)
+        res = self.hybrid.run_iteration(
+            self.params, decode_jobs, prefill_jobs,
+            layer_cb_async if worker is not None else layer_cb_sync)
+        if worker is not None:
+            # iteration fence: every merged write-back has landed before
+            # the epilogues sample logits or release DRAM pools
+            worker.drain()
         entry["launches"] = sum(f.calls
                                 for f in involved.values()) - calls0
 
@@ -1137,6 +1288,91 @@ class ServingEngine:
                     plane.drop_blocks(rid, layer, sorted(set(blks)))
             pending[rid] = keep
 
+    # ------------------------------------------------------------------
+    # Async host stage (stage_dispatch="async")
+    # ------------------------------------------------------------------
+    def _stage_worker(self) -> HostStageWorker:
+        """The engine's host-stage worker, created lazily (and re-created
+        after ``close()``, so a closed engine can still step)."""
+        if self._worker is None or self._worker.closed:
+            self._worker = HostStageWorker(name=f"host-stage-{id(self):x}")
+        return self._worker
+
+    def close(self) -> None:
+        """Shut down the host-stage worker: drains outstanding write-back
+        jobs (re-raising their errors) and joins the thread.  Idempotent;
+        ``run()`` calls it on exit."""
+        if self._worker is not None:
+            self._worker.close()
+            self._worker = None
+
+    def _stage_writeback_async(self, worker: HostStageWorker, lidx: int,
+                               req_ids: List[str], prev: Dict[str, int],
+                               kv_dev: Tuple) -> None:
+        """DISPATCH layer ``lidx``'s FlashD2H write-back: the stripe
+        conversion (the blocking np.asarray of the device gather) plus
+        ``save_new_tokens_fused`` + pool flush run on the host-stage
+        worker, off the dispatch thread.  Ordering contract: this is where
+        the fused d2h *starts* (plane-contract sequences it like the sync
+        save, before any drop); completion is closed by ``fence(lidx)``
+        before any same-layer DRAM gather and ``drain()`` before
+        sampling/release."""
+        k_dev, v_dev = kv_dev
+
+        def job() -> None:
+            k = np.asarray(k_dev)
+            v = None if v_dev is None else np.asarray(v_dev)
+            self.kv_mgr.save_new_tokens_fused(lidx, {
+                rid: (prev[rid], k[i][:, None, :],
+                      None if v is None else v[i][:, None, :])
+                for i, rid in enumerate(req_ids)})
+            for rid in req_ids:
+                pool = self.kv_mgr.pools.get(rid)
+                if pool is not None:
+                    pool.flush()
+        worker.submit(lidx, job)
+
+    def _stage_writeback_async_merged(self, worker: HostStageWorker,
+                                      lidx: int, parts: List[Tuple],
+                                      finishers: List[Tuple]) -> None:
+        """Mixed-iteration variant of ``_stage_writeback_async``: ONE
+        worker job per layer merges every decode plane's stripe
+        (``parts``: (req_ids, prev, kv_dev)) with every prefill group's
+        fresh-chunk KV (``finishers``: (chunk_start, finish) from
+        ``read_group_kv_async``) into a single ``save_new_tokens_fused``
+        call — the same one-fused-FlashD2H-per-layer shape as the sync
+        path, just converted and staged off-thread."""
+
+        def job() -> None:
+            kv_merge: Dict[str, Tuple[int, Any, Any]] = {}
+            for req_ids, prev, (k_dev, v_dev) in parts:
+                k = np.asarray(k_dev)
+                v = None if v_dev is None else np.asarray(v_dev)
+                for i, rid in enumerate(req_ids):
+                    kv_merge[rid] = (prev[rid], k[i][:, None, :],
+                                     None if v is None
+                                     else v[i][:, None, :])
+            for chunk_start, finish in finishers:
+                for rid, (k, v) in finish().items():
+                    cur = kv_merge.get(rid)
+                    if cur is None:
+                        kv_merge[rid] = (chunk_start, k, v)
+                    else:
+                        # same-rid chunks of one layer are contiguous in
+                        # plan order: extend the stripe along tokens
+                        s0, k0, v0 = cur
+                        kv_merge[rid] = (
+                            s0, np.concatenate([k0, k], axis=1),
+                            None if v is None
+                            else np.concatenate([v0, v], axis=1))
+            if kv_merge:
+                self.kv_mgr.save_new_tokens_fused(lidx, kv_merge)
+                for rid in kv_merge:
+                    pool = self.kv_mgr.pools.get(rid)
+                    if pool is not None:
+                        pool.flush()
+        worker.submit(lidx, job)
+
     def _decode_one(self, st: _ReqState) -> Tuple[int, int]:
         """Legacy sequential decode step (B=1): feed the last generated
         token, sample the next.  Returns (token, blocks_loaded)."""
@@ -1279,8 +1515,10 @@ class ServingEngine:
                            * self.geom.num_kv_heads)
         loads_total = [0]
 
-        def stage_cb(layer: int, sel: np.ndarray,
-                     prev: Dict[str, int]) -> None:
+        worker = self._stage_worker() if self._stage_async else None
+
+        def stage_cb_sync(layer: int, sel: np.ndarray,
+                          prev: Dict[str, int]) -> None:
             lidx = self._attn_layer_index(layer)
             if self.eng.decode_write_back:
                 # FlashD2H phase for THIS layer only (per-layer pipeline)
@@ -1325,8 +1563,76 @@ class ServingEngine:
             if self.staged_probe is not None:
                 self.staged_probe(self, plane, layer, sts, blocks_by_req)
 
-        logits, info, prev = plane.step_staged(self.params, tok_by_req,
-                                               stage_cb)
+        def stage_cb_async(layer: int, sel: np.ndarray,
+                           prev: Dict[str, int]) -> None:
+            # The DISPATCH WINDOW: between the driver's np.asarray(idx)
+            # and the attend dispatch that follows, nothing here may block
+            # on the device (plane-contract: no-sync-in-dispatch-window).
+            # The transfer guard turns a stray device->host sync into an
+            # error on accelerator backends (on CPU device buffers ARE
+            # host memory, so it cannot trip — the analyzer rule and the
+            # host_syncs counter pin the invariant there).
+            if sel is not None:
+                plane.host_syncs += 1     # the driver's idx sync, the ONE
+                                          # per-layer block we allow
+            lidx = self._attn_layer_index(layer)
+            with jax.transfer_guard_device_to_host("disallow"):
+                if self.eng.decode_write_back:
+                    # FlashD2H: dispatch the stripe gather, stage it on
+                    # the worker; the dispatch thread never converts it
+                    kv_dev = plane.new_token_kv_async(
+                        req_ids, prev, layers=[layer])[layer]
+                    self._stage_writeback_async(worker, lidx, req_ids,
+                                                dict(prev), kv_dev)
+                if sel is None:      # DSA off: nothing to stage or restore
+                    return
+                blocks_by_req: Dict[str, List[int]] = {}
+                for st in sts:
+                    rid = st.req.req_id
+                    blocks = dsa_mod.selected_block_ids(
+                        sel[plane.rows[rid]])
+                    blocks_by_req[rid] = blocks
+                    sel_pairs[rid].extend((lidx, x) for x in blocks)
+                # LRU bookkeeping stays on the dispatch thread (pure host
+                # work; keeps access order byte-identical to sync mode)
+                missing_by_req, evicted_by_req = self.kv_mgr.access_layer(
+                    lidx, blocks_by_req, drain_evicted=drop)
+                for rid, ev in evicted_by_req.items():
+                    pending_evict[rid].update(ev)
+                loads_total[0] += sum(len(m)
+                                      for m in missing_by_req.values())
+                if missing_by_req:
+                    self._staged_layer_bytes[layer] = (
+                        self._staged_layer_bytes.get(layer, 0)
+                        + sum(len(m) for m in missing_by_req.values())
+                        * per_block_bytes)
+                    # restore-before-use fence: this layer's outstanding
+                    # write-back must land in DRAM before we gather from
+                    # it (a 1-block LRU can miss on the block the current
+                    # token was just appended to)
+                    worker.fence(lidx)
+                    payloads = self.kv_mgr.load_blocks_fused(
+                        lidx, missing_by_req)
+                    if self.eng.decode_write_back:
+                        plane.restore_blocks_fused(
+                            layer, {rid: (missing_by_req[rid], k, v)
+                                    for rid, (k, v) in payloads.items()},
+                            before_use=True)
+                if drop:
+                    self._drop_pending_evictions(
+                        plane, sts, pending_evict,
+                        protect=(lidx, blocks_by_req))
+            if self.staged_probe is not None:
+                worker.fence(lidx)   # probes compare device vs host pools
+                self.staged_probe(self, plane, layer, sts, blocks_by_req)
+
+        logits, info, prev = plane.step_staged(
+            self.params, tok_by_req,
+            stage_cb_async if worker is not None else stage_cb_sync)
+        if worker is not None:
+            # iteration fence: every write-back has landed before sampling
+            # reads logits and before finish/release can retire a DRAM pool
+            worker.drain()
         self.decode_step_calls += 1
         self.decode_tokens += len(sts)
         if drop:
@@ -1569,9 +1875,13 @@ class ServingEngine:
         """Step until idle (every submitted request finished) or
         ``max_iters`` iterations, then return aggregate metrics (TTFT/TBT
         in engine-clock seconds, token throughput in tokens/s)."""
-        for _ in range(max_iters):
-            if self.step() is None:
-                break
+        try:
+            for _ in range(max_iters):
+                if self.step() is None:
+                    break
+        finally:
+            self.close()        # joins the host-stage worker; errors from
+                                # outstanding write-back jobs surface here
         return compute_metrics([st.req for st in self.states.values()],
                                max(self.now, 1e-9))
 

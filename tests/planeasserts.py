@@ -30,6 +30,56 @@ def staged_stage_kinds(cfg) -> int:
     return pc.staged_stage_kinds(cfg)
 
 
+def assert_donation_contract(fns):
+    """Every pool-updating stage of a live registry DECLARES buffer
+    donation on its pool/cache argument, exactly as the contract's
+    ``STAGED_DONATED_STAGES`` table says — on accelerator backends XLA
+    then updates the pool in place instead of copying a pool-sized buffer
+    per layer per iteration (on CPU the declaration is recorded but not
+    armed: CPU buffers are not donatable)."""
+    for stage, donate in pc.STAGED_DONATED_STAGES.items():
+        if stage not in fns.donated:
+            continue                     # stage absent for this arch family
+        assert fns.donated[stage] == tuple(donate), (
+            f"stage {stage!r} declares donate_argnums "
+            f"{fns.donated[stage]}, contract says {tuple(donate)}")
+    missing = set(pc.STAGED_DONATED_STAGES) - set(fns.donated)
+    assert not missing & {"select"}, (
+        f"pool-updating stages missing from the registry: {missing}")
+
+
+def assert_host_sync_invariant(plane, iterations, cfg=None):
+    """An async-mode plane's measured per-layer blocking syncs equal the
+    contract formula exactly: np.asarray(selected ids) once per attention
+    layer per iteration, and nothing else
+    (``pc.staged_host_syncs_per_iteration``)."""
+    cfg = cfg if cfg is not None else plane.cfg
+    expected = pc.staged_host_syncs_per_iteration(cfg) * iterations
+    assert plane.host_syncs == expected, (
+        f"host_syncs {plane.host_syncs} != {expected} "
+        f"({iterations} iterations)")
+
+
+def assert_stripe_readback_invariant(plane, iterations, rows):
+    """The FlashD2H readback stays STRIPE-sized: ``d2h_readback_bytes``
+    equals rows x one token's KV per attention layer per iteration — and
+    in particular is a vanishing fraction of the pool, pinning that the
+    write-back path never copies pool-sized buffers to host."""
+    cfg = plane.cfg
+    c = plane.state["caches"][plane.pool_layers()[0]]
+    itemsize = c["k"].dtype.itemsize
+    kv_factor = 2 if "v" in c else 1
+    Hkv = c["k"].shape[1]
+    D = c["k"].shape[-1]
+    stripe = rows * Hkv * D * itemsize * kv_factor
+    expected = stripe * len(plane.pool_layers()) * iterations
+    assert plane.d2h_readback_bytes == expected, (
+        f"d2h_readback_bytes {plane.d2h_readback_bytes} != {expected}")
+    assert stripe * len(plane.pool_layers()) < plane.device_bytes(), (
+        "per-iteration readback is pool-sized — the write-back path must "
+        "move one token's stripe per layer, not the pool")
+
+
 def assert_mixed_launch_invariant(engine):
     """Contract checks over every MIXED iteration an engine ran, from its
     measured ``mixed_iter_log``:

@@ -1,0 +1,190 @@
+"""Host-stage worker thread (core/host_stage.py): FIFO ordering and
+per-key fences, write-back-vs-gather ordering under the fence discipline,
+clean shutdown on engine release, and exception propagation from a
+worker job back into the iteration that dispatched it."""
+
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.core.host_stage import HostStageError, HostStageWorker
+from repro.core.kv_cache import HostPool, KVGeometry
+from repro.serving.engine import EngineConfig, ServingEngine
+from repro.serving.request import Request
+
+
+def _worker():
+    return HostStageWorker(name="test-host-stage")
+
+
+# ---------------------------------------------------------------------------
+# Ordering: FIFO execution, per-key fences, drain
+# ---------------------------------------------------------------------------
+
+def test_fifo_order_and_fence_per_key():
+    """Jobs run in submission order; fence(key) waits for every job of
+    that key but not for later-submitted keys."""
+    w = _worker()
+    ran = []
+    release = threading.Event()
+
+    def slow(tag):
+        release.wait(timeout=5)
+        ran.append(tag)
+
+    def fast(tag):
+        ran.append(tag)
+
+    w.submit(0, slow, "l0-a")
+    w.submit(0, fast, "l0-b")
+    w.submit(1, fast, "l1-a")
+    assert w.pending(0) and w.pending(1)
+    release.set()
+    w.fence(0)
+    # FIFO: both key-0 jobs done, in order, before the fence returned
+    assert ran[:2] == ["l0-a", "l0-b"]
+    w.drain()
+    assert ran == ["l0-a", "l0-b", "l1-a"]
+    assert not w.pending(0) and not w.pending(1)
+    w.close()
+
+
+def test_writeback_lands_before_fenced_gather():
+    """The restore-before-use discipline at the unit level: a DRAM gather
+    fenced on the write-back's key always reads the flushed stripe, even
+    when the worker job is slow — the exact 1-block-LRU rollover case the
+    engine fences for (gather of the block the token just appended to)."""
+    geom = KVGeometry(num_layers=1, num_kv_heads=2, block_size=4,
+                      head_dim=8, kv_factor=2)
+    pool = HostPool(geom, num_blocks=4)
+    w = _worker()
+    stripe_k = np.full((2, 1, 8), 7.0, np.float32)
+    stripe_v = np.full((2, 1, 8), 9.0, np.float32)
+
+    def job():
+        time.sleep(0.05)                      # let the gather race ahead
+        pool.stage(0, 5, stripe_k, stripe_v)  # token 5 -> block 1, slot 1
+        pool.flush()
+
+    w.submit(0, job)
+    w.fence(0)                                # engine: fence before gather
+    k, v = pool.gather(0, [1])
+    np.testing.assert_array_equal(k[:, 0, 1], stripe_k[:, 0])
+    np.testing.assert_array_equal(v[:, 0, 1], stripe_v[:, 0])
+    w.close()
+
+
+def test_lru_bookkeeping_stays_ordered_with_inflight_writeback():
+    """LRU access/drop ordering is main-thread-only by design: a slow
+    in-flight write-back job must not block or reorder host bookkeeping
+    for OTHER layers, and drain() makes everything visible before a
+    release could drop the pool."""
+    w = _worker()
+    events = []
+    gate = threading.Event()
+
+    def writeback(layer):
+        gate.wait(timeout=5)
+        events.append(("flush", layer))
+
+    w.submit(0, writeback, 0)
+    # main-thread bookkeeping proceeds while layer 0's job is in flight
+    events.append(("access", 1))
+    events.append(("drop", 1))
+    assert w.pending(0)
+    gate.set()
+    w.drain()                    # iteration fence: flush before release
+    events.append(("release", 0))
+    assert events == [("access", 1), ("drop", 1), ("flush", 0),
+                      ("release", 0)]
+    w.close()
+
+
+# ---------------------------------------------------------------------------
+# Shutdown
+# ---------------------------------------------------------------------------
+
+def test_close_is_idempotent_and_drains():
+    w = _worker()
+    ran = []
+    w.submit("x", ran.append, 1)
+    w.close()
+    assert ran == [1]            # close drained the queue first
+    w.close()                    # idempotent
+    with pytest.raises(HostStageError):
+        w.submit("x", ran.append, 2)
+
+
+def test_engine_run_closes_worker_and_step_recreates(smoke_setup):
+    """run() joins the worker on exit (clean shutdown on engine release);
+    a later step() lazily re-creates it."""
+    cfg, params = smoke_setup("qwen2-0.5b")
+    eng = ServingEngine(params, cfg, EngineConfig(chunk_size=64, r_max=4))
+    assert eng.eng.stage_dispatch == "async"
+    rng = np.random.default_rng(0)
+    eng.submit(Request(prompt_len=48, max_new_tokens=3),
+               tokens=rng.integers(4, cfg.vocab_size, 48).astype(np.int32))
+    eng.run()
+    assert eng._worker is None   # closed (and joined) in run()'s finally
+    w = eng._stage_worker()
+    assert not w.closed
+    eng.close()
+    assert eng._worker is None
+    eng.close()                  # idempotent
+
+
+# ---------------------------------------------------------------------------
+# Exception propagation
+# ---------------------------------------------------------------------------
+
+def test_worker_exception_reraised_on_fence_and_fail_fast():
+    w = _worker()
+
+    def boom():
+        raise ValueError("stripe out of range")
+
+    ran = []
+    w.submit(0, boom)
+    w.submit(0, ran.append, "after")          # fail-fast: skipped
+    with pytest.raises(HostStageError) as ei:
+        w.fence(0)
+    assert isinstance(ei.value.__cause__, ValueError)
+    assert ran == []                          # job after the failure skipped
+    w.close()
+
+
+def test_hostpool_bounds_error_propagates_through_worker():
+    """The real failure mode: HostPool.stage raises on an out-of-range
+    stripe; staged off-thread, the error must surface on the dispatch
+    thread instead of vanishing on a daemon thread."""
+    geom = KVGeometry(num_layers=1, num_kv_heads=2, block_size=4,
+                      head_dim=8, kv_factor=2)
+    pool = HostPool(geom, num_blocks=1)       # 4-token capacity
+    w = _worker()
+    stripe = np.zeros((2, 1, 8), np.float32)
+    w.submit(0, pool.stage, 0, 99, stripe, stripe)   # token 99: off the end
+    with pytest.raises(HostStageError) as ei:
+        w.drain()
+    assert isinstance(ei.value.__cause__, ValueError)
+    w.close()
+
+
+def test_writeback_failure_fails_the_iteration(smoke_setup, monkeypatch):
+    """A failing write-back job aborts the engine iteration that fenced
+    on it (exception propagation from worker back to the iteration)."""
+    cfg, params = smoke_setup("qwen2-0.5b")
+    eng = ServingEngine(params, cfg, EngineConfig(chunk_size=64, r_max=4))
+    rng = np.random.default_rng(1)
+    eng.submit(Request(prompt_len=48, max_new_tokens=4),
+               tokens=rng.integers(4, cfg.vocab_size, 48).astype(np.int32))
+
+    def boom(*a, **k):
+        raise ValueError("injected save failure")
+
+    monkeypatch.setattr(eng.kv_mgr, "save_new_tokens_fused", boom)
+    with pytest.raises(HostStageError) as ei:
+        eng.run()
+    assert isinstance(ei.value.__cause__, ValueError)
+    assert eng._worker is None               # run()'s finally still closed it

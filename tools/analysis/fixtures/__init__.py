@@ -75,6 +75,13 @@ FIXTURES = {
                            "group_cb", f"{_FX}/bad_ctx_after_window.py",
                            "good_group_cb"),)),
         pc.RULE_CTX_LIFETIME),
+    "bad_sync_in_window": (
+        _driver_target("bad_sync_in_window", "bad_sync_in_window.py",
+                       "BadAsyncPlane.step_staged", "staged-decode-async",
+                       callbacks=(pc.CallbackSpec(
+                           "stage_cb", f"{_FX}/bad_sync_in_window.py",
+                           "async_stage_cb"),)),
+        pc.RULE_NO_SYNC_IN_DISPATCH_WINDOW),
     "bad_per_request_launch": (
         _driver_target("bad_per_request_launch",
                        "bad_per_request_launch.py", "BadGroup.run_group",

@@ -1,0 +1,30 @@
+"""Seeded violation: a host-blocking readback inside an ASYNC dispatch
+window — ``stage_dispatch="async"`` promises the driver's np.asarray of
+the selection tensor is the ONLY per-layer block on the dispatch thread.
+The callback below converts the freshly appended KV stripe with the
+BLOCKING ``new_token_kv`` instead of dispatching ``new_token_kv_async``
+and handing the conversion to the HostStageWorker, re-serializing
+attend(l) / select(l+1) behind the transfer — exactly the pipeline the
+async mode exists to overlap.  Analyzed as source only; never imported."""
+
+
+def async_stage_cb(plane, host, worker, i, sel, prev):
+    # BAD: blocking stripe readback on the dispatch thread (should be
+    # new_token_kv_async + a worker job fenced before the layer's gather)
+    kv = plane.new_token_kv(prev, layers=[i])
+    worker.submit(i, kv)
+    missing = host.access_layer(i, sel)
+    if missing:
+        worker.fence(i)
+        payloads = host.load_blocks_fused(i, missing)
+        plane.restore_blocks_fused(i, payloads, before_use=True)
+
+
+class BadAsyncPlane:
+    def step_staged(self, params, fns, plane, host, worker, stage_cb):
+        x = fns.embed(params, None)
+        for i in range(4):
+            sel = fns.select(params, x)
+            stage_cb(plane, host, worker, i, sel, None)
+            x = fns.attend(params, x, sel)
+        return fns.logits(params, x)

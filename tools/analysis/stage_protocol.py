@@ -246,7 +246,9 @@ def check_driver(repo_root: Path, driver: pc.DriverSpec,
                      f"{e.call} with no preceding FlashD2H write-back in "
                      f"its window — dropped data would exist nowhere")
             if (e.kind == "drop" and e.stack
-                    and driver.protocol in ("staged-decode", "hybrid-plane")
+                    and driver.protocol in ("staged-decode", "hybrid-plane",
+                                            "staged-decode-async",
+                                            "hybrid-plane-async")
                     and "protect" not in e.kwargs):
                 flag(pc.RULE_WRITEBACK_BEFORE_DROP, e,
                      f"in-window {e.call} without protect= — blocks "
@@ -282,6 +284,30 @@ def check_driver(repo_root: Path, driver: pc.DriverSpec,
                      f"{e.call} outside the group callback — the "
                      f"one-layer ctx buffer is overwritten by the next "
                      f"layer's launch")
+
+    if pc.RULE_NO_SYNC_IN_DISPATCH_WINDOW in rules:
+        # an async stage callback runs INSIDE the dispatch window: between
+        # the driver's np.asarray(selected ids) — the one allowed per-layer
+        # sync, which happens BEFORE the callback — and the attend/select
+        # dispatch that follows it.  Any host-blocking device readback in
+        # the callback re-serializes the pipeline the async mode exists to
+        # overlap: explicit syncs (np.asarray / block_until_ready /
+        # device_get) and the blocking readback helpers (sub "" — use the
+        # *_async variants, which only dispatch and hand completion to the
+        # HostStageWorker behind the per-layer fence).
+        for e in effects:
+            if not e.in_callback:
+                continue
+            if e.kind == "sync":
+                flag(pc.RULE_NO_SYNC_IN_DISPATCH_WINDOW, e,
+                     f"host-blocking sync ({e.call}) inside the async "
+                     f"dispatch window — the driver's selection sync is "
+                     f"the only allowed per-layer block")
+            elif e.kind in ("pool-read", "ctx-read") and e.sub == "":
+                flag(pc.RULE_NO_SYNC_IN_DISPATCH_WINDOW, e,
+                     f"blocking readback ({e.call}) inside the async "
+                     f"dispatch window — use {e.call}_async and stage the "
+                     f"conversion on the HostStageWorker")
 
     if pc.RULE_LAUNCHES in rules:
         for e in effects:
