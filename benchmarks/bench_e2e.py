@@ -59,7 +59,7 @@ def hybrid_plane_vs_split() -> None:
                        tokens=rng.integers(4, cfg.vocab_size,
                                            p).astype(np.int32))
         m = eng.run()
-        s = eng.transfer_stats()
+        s = eng.metrics_snapshot()
         log = eng.mixed_iter_log
         rows[mode] = dict(
             mode=mode,
@@ -72,7 +72,8 @@ def hybrid_plane_vs_split() -> None:
                                        if e["decode_rows"] > 0
                                        and e["prefill_rows"] > 0)
                                    / max(len(log), 1), 3) if log else 0.0),
-            d2h_calls=s.d2h_calls, h2d_calls=s.h2d_calls)
+            d2h_calls=int(s["kv.d2h_calls"]),
+            h2d_calls=int(s["kv.h2d_calls"]))
     rows["mixed"]["ttft_split_over_mixed"] = round(
         rows["split"]["mean_ttft_s"]
         / max(rows["mixed"]["mean_ttft_s"], 1e-9), 3)

@@ -139,20 +139,31 @@ def staged_vs_fused_section() -> None:
 
 def achieved_overlap_section() -> None:
     """Measured (wall-clock) async-dispatch overlap: the same engine and
-    eviction pressure as ``overlap_plane``, sync vs async stage dispatch.
+    eviction pressure as ``overlap_plane``, sync vs async stage dispatch,
+    with the obs layer enabled so the async run produces a Chrome trace.
 
     Per mode: end-to-end wall seconds and decode tokens/s, plus the
     last-iteration per-layer dispatch timeline the staged plane records —
     ``dispatch_sync_ms`` (the driver's np.asarray of the selection
     tensor, the one allowed per-layer block) and ``host_stage_ms`` (the
-    stage callback: FlashD2H write-back, LRU, FlashH2D restores).  Async
-    moves the stripe conversion + DRAM save onto the HostStageWorker, so
-    its ``host_stage_ms`` shrinks; the summary row reports that shrink as
-    ``measured_overlap_fraction`` (fraction of the sync host stage moved
-    off the dispatch thread) next to the cost model's
-    ``modeled_overlap_speedup`` bound for the same traffic.  Values are
-    informational on CPU smoke hardware — nightly asserts the section
-    EXISTS, not a speedup (no hard CI fail on noise)."""
+    stage callback: FlashD2H write-back, LRU, FlashH2D restores).  The
+    summary row pins the async run's achieved overlap with TWO
+    independent instruments over the SAME run:
+
+    - ``measured_overlap_fraction`` — counters: worker ``busy_s`` over
+      (busy_s + the plane's accumulated ``host_stage_s``), the fraction
+      of host-stage work that ran off the dispatch thread
+      (``engine.stage_overlap_measured()``);
+    - ``achieved_overlap_fraction`` — the trace: worker-span intervals
+      intersected with iteration spans over (that + dispatch host-stage
+      spans), from ``obs.trace_analysis`` — nightly asserts the two
+      agree within 10%.
+
+    ``host_stage_shrink_fraction`` keeps the old cross-run view (how much
+    the dispatch-thread host stage shrank vs sync).  Wall speedups stay
+    informational on CPU smoke hardware (noise); with
+    ``REPRO_TRACE_DIR`` set the async run's ``.trace.json`` is written
+    there (the nightly artifact next to BENCH_*.json)."""
     from benchmarks.common import Timer
     from repro.serving.engine import EngineConfig, ServingEngine
     from repro.serving.request import Request
@@ -163,10 +174,11 @@ def achieved_overlap_section() -> None:
     params = M.init_params(cfg, jax.random.PRNGKey(0), jnp.float32)
     stage_ms = {}
     wall = {}
+    engines = {}
     for mode in ("sync", "async"):
         eng = ServingEngine(params, cfg, EngineConfig(
             chunk_size=64, r_max=4, hybrid_plane="split",
-            hbm_blocks_per_request=1, stage_dispatch=mode))
+            hbm_blocks_per_request=1, stage_dispatch=mode, obs=True))
         rng = np.random.default_rng(3)
         for _ in range(3):
             eng.submit(Request(prompt_len=64, max_new_tokens=12),
@@ -174,6 +186,7 @@ def achieved_overlap_section() -> None:
                                            64).astype(np.int32))
         with Timer() as t:
             eng.run()
+        engines[mode] = eng
         [plane] = eng.planes.values()
         tl = plane.stage_timeline            # last decode iteration
         sync_ms = sum(s for _, s, _ in tl) * 1e3
@@ -188,12 +201,26 @@ def achieved_overlap_section() -> None:
              host_stage_ms=round(host_ms, 4),
              host_syncs=plane.host_syncs,
              timeline_layers=len(tl))
+    a = engines["async"]
+    measured = a.stage_overlap_measured()
+    achieved = a.stage_overlap_from_trace()
     emit("achieved_overlap", mode="summary",
-         measured_overlap_fraction=round(
+         measured_overlap_fraction=(round(measured, 6)
+                                    if measured is not None else None),
+         achieved_overlap_fraction=(round(achieved, 6)
+                                    if achieved is not None else None),
+         worker_jobs_run=a.worker_jobs_run,
+         host_stage_shrink_fraction=round(
              max(0.0, 1.0 - stage_ms["async"] / max(stage_ms["sync"],
                                                     1e-12)), 3),
          async_wall_speedup=round(wall["sync"] / max(wall["async"], 1e-12),
                                   3))
+    tdir = _os.environ.get("REPRO_TRACE_DIR", "")
+    if tdir:
+        _os.makedirs(tdir, exist_ok=True)
+        path = _os.path.join(tdir, "fig8_achieved_overlap.trace.json")
+        n = engines["async"].dump_trace(path)
+        emit("achieved_overlap", mode="trace", path=path, events=n)
 
 
 def main() -> None:

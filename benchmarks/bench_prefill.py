@@ -139,7 +139,7 @@ def prefill_plane_vs_legacy() -> None:
              jit_traces=fns.trace_count - traces0,
              jit_cache_hit=int(fns.trace_count
                                == len(fns.shape_signatures)),
-             d2h_calls=eng.transfer_stats().d2h_calls,
+             d2h_calls=int(eng.metrics_snapshot()["kv.d2h_calls"]),
              mean_ttft_s=round(m.mean_ttft, 6),
              hbm_peak_token_layers=eng.prefill_hbm_peak_tokens)
 

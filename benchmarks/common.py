@@ -56,6 +56,24 @@ def header(title: str) -> None:
         _section = title
 
 
+# Default engine-snapshot fields benches emit per run; dots become
+# underscores so the CSV keys stay shell-friendly.
+TRANSFER_KEYS = ("kv.h2d_calls", "kv.h2d_blocks", "kv.h2d_bytes",
+                 "kv.d2h_calls", "kv.d2h_bytes",
+                 "kv.hits", "kv.misses", "kv.evictions")
+
+
+def emit_engine_metrics(name: str, eng: Any, keys=TRANSFER_KEYS,
+                        **extra: Any) -> None:
+    """Emit one row of ``engine.metrics_snapshot()`` fields — the obs
+    surface replaces per-bench TransferStats plumbing (``s.h2d_calls``
+    reads scattered through every bench)."""
+    snap = eng.metrics_snapshot()
+    fields: Dict[str, Any] = {k.replace(".", "_"): snap[k] for k in keys}
+    fields.update(extra)
+    emit(name, **fields)
+
+
 class Timer:
     def __enter__(self):
         self.t0 = time.perf_counter()

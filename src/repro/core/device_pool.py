@@ -56,6 +56,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.models import model as M
+from repro.obs.tracing import NULL_TRACER
 
 # Route row-slot block movement through the Pallas kernels
 # (kernels/gather_blocks.py / scatter_blocks.py, _hkv variants).  Default is
@@ -363,6 +364,13 @@ class DevicePoolPlane:
                                          # buffers to host
         self.stage_timeline: List[Tuple[int, float, float]] = []
         # last iteration's (layer, idx_sync_s, host_stage_s) per stage_cb
+        self.dispatch_sync_s = 0.0       # accumulated idx-sync time, all
+        self.host_stage_s = 0.0          # iterations; the counter half of
+                                         # the overlap cross-check (the
+                                         # trace half reuses the same
+                                         # perf_counter reads)
+        self.tracer = NULL_TRACER        # engine swaps in a live Tracer
+                                         # when EngineConfig.obs is on
         # per-layer param slices for the staged pipeline, cached per params
         # OBJECT (the entry's strong ref keeps the id() stable).  Lives on
         # the plane — not the process-global _StagedDecodeFns — so retired
@@ -557,6 +565,7 @@ class DevicePoolPlane:
         prev = {rid: self.cur_host[rid] for rid in token_by_req}
         info: Dict[str, Any] = {"selected": {}}
         timeline: List[Tuple[int, float, float]] = []
+        tr = self.tracer
 
         x = fns.embed(params, tokens)
         for i in range(cfg.num_layers):
@@ -566,8 +575,12 @@ class DevicePoolPlane:
                     layer_params[i], x, st["caches"][i], mask)
                 st["caches"][i] = new_cache
                 continue
+            if tr.enabled:
+                _ts = time.perf_counter()
             q, new_cache, idx, valid = fns.select(
                 layer_params[i], x, st["caches"][i], st["cur_len"], mask)
+            if tr.enabled:
+                tr.end("select", "stage", _ts, layer=i)
             st["caches"][i] = new_cache
             if idx is not None:
                 info["selected"][i] = idx
@@ -586,13 +599,29 @@ class DevicePoolPlane:
                 sel = None if idx is None else np.asarray(idx)
                 t1 = time.perf_counter()
                 stage_cb(i, sel, prev)
-                timeline.append((i, t1 - t0, time.perf_counter() - t1))
+                t2 = time.perf_counter()
+                timeline.append((i, t1 - t0, t2 - t1))
+                if tr.enabled:
+                    # the spans reuse t0/t1/t2 verbatim — the trace and
+                    # the dispatch_sync_s/host_stage_s counters are the
+                    # same measurement exported two ways
+                    tr.complete_at("idx-sync", "stage", t0, t1 - t0,
+                                   layer=i)
+                    tr.complete_at("host-stage", "host-stage", t1,
+                                   t2 - t1, layer=i)
+            if tr.enabled:
+                _ts = time.perf_counter()
             x = fns.attend(layer_params[i], x, q, st["caches"][i],
                            st["cur_len"], idx, valid,
                            M.index_enc_kvs(enc_kvs, i))
+            if tr.enabled:
+                tr.end("attend", "stage", _ts, layer=i)
         logits, new_len = fns.logits(params, x, st["cur_len"], mask)
         st["cur_len"] = new_len
         self.stage_timeline = timeline
+        for _, _sync_s, _stage_s in timeline:
+            self.dispatch_sync_s += _sync_s
+            self.host_stage_s += _stage_s
         self.buckets_seen.add((self.b_cap, self.nb_cap))
         self.steps += 1
         for rid in token_by_req:

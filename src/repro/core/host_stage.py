@@ -33,7 +33,10 @@ from __future__ import annotations
 
 import queue
 import threading
+import time
 from typing import Any, Callable, Dict, Optional
+
+from repro.obs.tracing import NULL_TRACER
 
 
 class HostStageError(RuntimeError):
@@ -58,13 +61,15 @@ class HostStageWorker:
     submitted under that key.
     """
 
-    def __init__(self, name: str = "host-stage"):
+    def __init__(self, name: str = "host-stage", tracer=None):
         self._q: "queue.Queue[Optional[_Job]]" = queue.Queue()
         self._last: Dict[Any, _Job] = {}       # key -> most recent job
         self._lock = threading.Lock()
         self._exc: Optional[BaseException] = None
         self._closed = False
         self.jobs_run = 0
+        self.busy_s = 0.0                      # total time inside job fns
+        self.tracer = tracer if tracer is not None else NULL_TRACER
         self._thread = threading.Thread(target=self._loop, name=name,
                                         daemon=True)
         self._thread.start()
@@ -77,8 +82,17 @@ class HostStageWorker:
                 return
             try:
                 if self._exc is None:          # fail fast after first error
+                    t0 = time.perf_counter()
                     job.fn(*job.args)
+                    dt = time.perf_counter() - t0
+                    self.busy_s += dt
                     self.jobs_run += 1
+                    tr = self.tracer
+                    if tr.enabled:
+                        # same t0/dt as busy_s, so the trace and counter
+                        # overlap instruments cannot drift on one run
+                        tr.complete_at("host-stage", "host-stage-worker",
+                                       t0, dt, key=job.key)
             except BaseException as e:         # noqa: BLE001 - re-raised
                 self._exc = e                  # on the dispatch thread
             finally:

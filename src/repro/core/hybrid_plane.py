@@ -59,6 +59,7 @@ from repro.core.prefill_plane import (PrefillGroupRun,
                                       PrefillIterationResult, PrefillPlane,
                                       PrefillWalk, prefill_fns_for)
 from repro.models import model as M
+from repro.obs.tracing import NULL_TRACER
 
 
 class _HybridFns:
@@ -160,6 +161,11 @@ class HybridPlane:
         self.iterations = 0
         self.stage_timeline: List[Tuple[int, float, float]] = []
         # last iteration's (layer, idx_sync_s, host_stage_s) per layer_cb
+        self.dispatch_sync_s = 0.0    # accumulated across iterations —
+        self.host_stage_s = 0.0       # counter half of the overlap
+                                      # cross-check (see device_pool)
+        self.tracer = NULL_TRACER     # engine installs a live Tracer
+                                      # when EngineConfig.obs is on
 
     def run_iteration(self, params: Dict, decode_jobs: List[DecodeJob],
                       prefill_jobs: List[PrefillJob],
@@ -191,11 +197,14 @@ class HybridPlane:
         for pj in prefill_jobs:
             pre.append((pj.plane, pj.plane.begin_iteration(pj.allowance)))
         timeline: List[Tuple[int, float, float]] = []
+        tr = self.tracer
         for i in range(cfg.num_layers):
             kind = M.layer_kind(cfg, i)
             selections: List[Tuple[DecodeRun, Optional[np.ndarray]]] = []
             t_sync = 0.0
             if kind == "attn":
+                if tr.enabled and dec:
+                    _ts = time.perf_counter()
                 for d in dec:
                     st = d.plane.state
                     q, new_cache, idx, valid = d.fns.select(
@@ -212,6 +221,9 @@ class HybridPlane:
                     selections.append(
                         (d, None if idx is None else np.asarray(idx)))
                     t_sync += time.perf_counter() - t0
+                if tr.enabled and dec:
+                    tr.end("select", "stage", _ts, layer=i,
+                           planes=len(dec))
             else:
                 for d in dec:
                     st = d.plane.state
@@ -227,15 +239,30 @@ class HybridPlane:
                 layer_cb(LayerWindow(layer=i, kind=kind,
                                      selections=selections,
                                      groups=layer_groups))
-                timeline.append((i, t_sync, time.perf_counter() - t1))
+                t2 = time.perf_counter()
+                timeline.append((i, t_sync, t2 - t1))
+                if tr.enabled:
+                    # same t1/t2 as the timeline entry: trace and counter
+                    # overlap instruments share the measurement
+                    tr.complete_at("host-stage", "host-stage", t1,
+                                   t2 - t1, layer=i,
+                                   groups=len(layer_groups))
             if kind == "attn":
+                if tr.enabled and dec:
+                    _ts = time.perf_counter()
                 for d in dec:
                     st = d.plane.state
                     d.x = d.fns.attend(d.layer_params[i], d.x, d.q,
                                        st["caches"][i], st["cur_len"],
                                        d.idx, d.valid,
                                        M.index_enc_kvs(d.enc_kvs, i))
+                if tr.enabled and dec:
+                    tr.end("attend", "stage", _ts, layer=i,
+                           planes=len(dec))
         self.stage_timeline = timeline
+        for _, _sync_s, _stage_s in timeline:
+            self.dispatch_sync_s += _sync_s
+            self.host_stage_s += _stage_s
         out_dec = []
         for d in dec:
             st = d.plane.state

@@ -16,9 +16,12 @@ from __future__ import annotations
 
 import collections
 import dataclasses
+import time
 from typing import Dict, List, Optional, Tuple
 
 import numpy as np
+
+from repro.obs.tracing import NULL_TRACER
 
 
 @dataclasses.dataclass
@@ -273,6 +276,8 @@ class KVCacheManager:
         self.pools: Dict[str, HostPool] = {}
         self._retired_stats = TransferStats()   # stats of released requests
         self.fused_stats = TransferStats()      # batched FlashH2D launches
+        self.tracer = NULL_TRACER               # engine installs a live
+                                                # Tracer when obs is on
 
     # -- lifecycle ---------------------------------------------------------
     def register(self, req_id: str, max_tokens: int,
@@ -347,6 +352,9 @@ class KVCacheManager:
         under the persistent decode plane the engine scatters these
         payloads DIRECTLY into the requests' device slots
         (``DevicePoolPlane.restore_blocks``)."""
+        tr = self.tracer
+        if tr.enabled:
+            _ts = time.perf_counter()
         out: Dict[str, Tuple[np.ndarray, Optional[np.ndarray]]] = {}
         total_blocks = 0
         total_bytes = 0
@@ -362,6 +370,10 @@ class KVCacheManager:
             self.fused_stats.h2d_calls += 1
             self.fused_stats.h2d_blocks += total_blocks
             self.fused_stats.h2d_bytes += total_bytes
+            if tr.enabled:
+                tr.end("FlashH2D", "transfer", _ts, layer=layer,
+                       blocks=total_blocks, bytes=total_bytes,
+                       fused_reqs=len(out))
         return out
 
     def save_new_tokens_fused(self, layer: int,
@@ -384,6 +396,9 @@ class KVCacheManager:
         ``flush``.  Keeping the host pool a byte-exact superset of device
         KV is what makes ``load_blocks_fused`` payloads safe to scatter
         straight into device slots."""
+        tr = self.tracer
+        if tr.enabled:
+            _ts = time.perf_counter()
         total_bytes = 0
         for req_id, (start, k, v) in kv_by_req.items():
             pool = self.pools.get(req_id)
@@ -393,6 +408,11 @@ class KVCacheManager:
         if total_bytes:
             self.fused_stats.d2h_calls += 1
             self.fused_stats.d2h_bytes += total_bytes
+            # in async mode this fires on the HostStageWorker thread —
+            # the tracer is thread-safe and books the span to that tid
+            if tr.enabled:
+                tr.end("FlashD2H", "transfer", _ts, layer=layer,
+                       bytes=total_bytes, fused_reqs=len(kv_by_req))
 
     # -- accounting --------------------------------------------------------
     def hbm_used_bytes(self) -> int:

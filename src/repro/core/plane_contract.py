@@ -56,6 +56,7 @@ RULE_NO_SYNC_IN_DISPATCH_WINDOW = "no-sync-in-dispatch-window"
 RULE_TRACED_BRANCH = "traced-branch"
 RULE_TRACER_COERCION = "tracer-coercion"
 RULE_NP_IN_JIT = "np-in-jit"
+RULE_OBS_IN_JIT = "no-obs-in-jit"
 RULE_UNHASHABLE_KEY = "unhashable-key"
 RULE_KEY_MISSING_FIELD = "key-missing-field"
 # pass 3 — sharding
@@ -67,9 +68,20 @@ ALL_RULES = (
     RULE_FUSED_TRANSFER, RULE_CTX_LIFETIME, RULE_LAUNCHES,
     RULE_NO_SYNC_IN_DISPATCH_WINDOW,
     RULE_TRACED_BRANCH, RULE_TRACER_COERCION, RULE_NP_IN_JIT,
+    RULE_OBS_IN_JIT,
     RULE_UNHASHABLE_KEY, RULE_KEY_MISSING_FIELD,
     RULE_COLLECTIVE, RULE_SHARDING_LEAK,
 )
+
+# Roots that identify an obs-layer object in source (pass 2's
+# no-obs-in-jit): a call like ``tracer.end(...)`` / ``self.metrics.inc()``
+# inside a jitted stage body is a host side effect that fires once at
+# trace time and never again — spans silently vanish, counters undercount.
+# Instrumentation belongs in the drivers, around the stage launches.
+OBS_ROOT_NAMES = frozenset({
+    "tracer", "_tracer", "obs", "_obs", "metrics", "_metrics",
+    "metrics_registry", "registry",
+})
 
 # ---------------------------------------------------------------------------
 # Effect vocabulary (pass 1)
@@ -129,6 +141,16 @@ EFFECT_OF_CALL: Dict[str, Tuple[str, str]] = {
     "asarray": ("sync", "host"),
     "block_until_ready": ("sync", "host"),
     "device_get": ("sync", "host"),
+    # blocking obs exports (file I/O / full-registry walks / event-list
+    # copies) — fine between iterations, forbidden inside an async
+    # dispatch window for the same reason (they re-serialize the overlap
+    # the pipeline exists to create).  Guarded `tracer.enabled` span
+    # emission is NOT in this table: it never blocks.
+    "dump_trace": ("sync", "obs"),
+    "chrome_trace": ("sync", "obs"),
+    "metrics_snapshot": ("sync", "obs"),
+    "metrics_prometheus": ("sync", "obs"),
+    "prometheus_text": ("sync", "obs"),
 }
 
 # ---------------------------------------------------------------------------

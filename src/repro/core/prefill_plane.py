@@ -40,6 +40,7 @@ from __future__ import annotations
 
 import bisect
 import dataclasses
+import time
 from typing import Any, Dict, List, Optional, Tuple
 
 import jax
@@ -49,6 +50,7 @@ import numpy as np
 from repro.core.device_pool import BucketingPolicy, StageFns
 from repro.core.layer_prefill import PrefillSegment
 from repro.models import model as M
+from repro.obs.tracing import NULL_TRACER
 
 
 class _PrefillFns(StageFns):
@@ -208,6 +210,8 @@ class PrefillPlane:
         self.finalize_launches = 0
         self.iterations = 0
         self.buckets_seen: set = set()      # (b_cap, chunk_cap) launched at
+        self.tracer = NULL_TRACER           # engine installs a live Tracer
+                                            # when EngineConfig.obs is on
 
     # -- params ------------------------------------------------------------
 
@@ -461,6 +465,9 @@ class PrefillPlane:
                    rids: List[str]) -> PrefillGroupRun:
         cfg = self.cfg
         kind = M.layer_kind(cfg, layer)
+        tr = self.tracer
+        if tr.enabled:
+            _ts = time.perf_counter()
         segs = {rid: self.segments[rid][self.next_idx[rid]] for rid in rids}
         t_cap = min(self.policy.bucket_tokens(
             max(s.chunk_len for s in segs.values())), self.s_cap - start)
@@ -512,6 +519,10 @@ class PrefillPlane:
         if start > 0:
             self.chunk_launches += 1
         self.buckets_seen.add((self.b_cap, t_cap))
+        if tr.enabled:
+            tr.end("prefill-group", "prefill", _ts, layer=layer,
+                   chunk_start=start, chunk_cap=t_cap, rows=len(rids),
+                   kind=kind)
         return PrefillGroupRun(layer=layer, kind=kind, chunk_start=start,
                                chunk_cap=t_cap, req_ids=list(rids),
                                segs=segs)

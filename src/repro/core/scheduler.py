@@ -91,6 +91,10 @@ class Scheduler:
             req.req_id, DecodeWorkingSet(self.geom, window=12))
         ws.observe(selected)
 
+    def queue_depths(self) -> Tuple[int, int]:
+        """(waiting, running) — the obs layer's queue-depth gauges."""
+        return len(self.waiting), len(self.running)
+
     # ------------------------------------------------------------------
     def _estimate_ws(self, req: Request) -> int:
         """estimateWS(req) from Algorithm 1, line 9."""

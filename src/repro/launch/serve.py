@@ -1,11 +1,15 @@
 """Serving launcher: drive the real engine with a synthetic LongBench trace.
 
     PYTHONPATH=src python -m repro.launch.serve --arch qwen2-0.5b --smoke \
-        --requests 8 --prompt 192 --gen 8 [--prefill chunked] [--no-ws]
+        --requests 8 --prompt 192 --gen 8 [--prefill chunked] [--no-ws] \
+        [--obs] [--trace-out run.trace.json] [--prom]
 
 Prints TTFT/TBT/throughput and the hierarchical-KV transfer statistics
 (FlashH2D/D2H calls, hit rates) — the numbers the paper's Figs. 10–16
-track.
+track — all read from ``engine.metrics_snapshot()``, the one obs
+surface.  ``--trace-out`` writes the run's Chrome trace-event JSON
+(open in https://ui.perfetto.dev); ``--prom`` dumps the Prometheus text
+exposition.
 """
 from __future__ import annotations
 
@@ -36,14 +40,24 @@ def main(argv=None) -> int:
     ap.add_argument("--no-ws", action="store_true")
     ap.add_argument("--cache-blocks", type=int, default=64)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--obs", action="store_true",
+                    help="enable the tracing+metrics layer (EngineConfig"
+                         ".obs; also via REPRO_OBS=1)")
+    ap.add_argument("--trace-out", default="",
+                    help="write Chrome trace-event JSON here (implies "
+                         "--obs; open in ui.perfetto.dev)")
+    ap.add_argument("--prom", action="store_true",
+                    help="print the Prometheus text exposition of the "
+                         "final metrics snapshot")
     args = ap.parse_args(argv)
 
+    obs = args.obs or bool(args.trace_out) or None   # None -> REPRO_OBS env
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
     params = M.init_params(cfg, jax.random.PRNGKey(args.seed), jnp.float32)
     eng = ServingEngine(params, cfg, EngineConfig(
         prefill_mode=args.prefill, chunk_size=args.chunk,
         ws_control=not args.no_ws,
-        hbm_blocks_per_request=args.cache_blocks, seed=args.seed))
+        hbm_blocks_per_request=args.cache_blocks, seed=args.seed, obs=obs))
 
     rng = np.random.default_rng(args.seed)
     t = 0.0
@@ -60,18 +74,30 @@ def main(argv=None) -> int:
         eng.submit(req, **extra)
 
     m = eng.run()
-    ts = eng.transfer_stats()
-    print(f"arch={cfg.name} prefill={args.prefill} ws={not args.no_ws}")
-    print(f"finished={m.num_finished}/{args.requests} iters={eng.iterations}")
+    s = eng.metrics_snapshot()
+    print(f"arch={cfg.name} prefill={args.prefill} ws={not args.no_ws} "
+          f"obs={int(s['obs.enabled'])}")
+    print(f"finished={m.num_finished}/{args.requests} "
+          f"iters={s['engine.iterations']:.0f}")
     print(f"mean TTFT {m.mean_ttft*1e3:.2f} ms | mean TBT "
           f"{m.mean_tbt*1e3:.3f} ms | {m.token_throughput:.1f} tok/s")
-    print(f"FlashH2D: {ts.h2d_calls} fused launches, {ts.h2d_blocks} blocks, "
-          f"{ts.h2d_bytes/1e6:.2f} MB")
-    print(f"FlashD2H: {ts.d2h_calls} saves, {ts.d2h_blocks} blocks, "
-          f"{ts.d2h_bytes/1e6:.2f} MB")
-    tot = max(ts.hits + ts.misses, 1)
-    print(f"HBM cache: {ts.hits} hits / {ts.misses} misses "
-          f"({100*ts.hits/tot:.1f}% hit rate), {ts.evictions} evictions")
+    print(f"FlashH2D: {s['kv.h2d_calls']:.0f} fused launches, "
+          f"{s['kv.h2d_blocks']:.0f} blocks, {s['kv.h2d_bytes']/1e6:.2f} MB")
+    print(f"FlashD2H: {s['kv.d2h_calls']:.0f} saves, "
+          f"{s['kv.d2h_blocks']:.0f} blocks, {s['kv.d2h_bytes']/1e6:.2f} MB")
+    tot = max(s["kv.hits"] + s["kv.misses"], 1)
+    print(f"HBM cache: {s['kv.hits']:.0f} hits / {s['kv.misses']:.0f} "
+          f"misses ({100*s['kv.hits']/tot:.1f}% hit rate), "
+          f"{s['kv.evictions']:.0f} evictions")
+    overlap = eng.stage_overlap_measured()
+    if overlap is not None:
+        print(f"async host-stage overlap: {100*overlap:.1f}% of host-stage "
+              f"work off-thread ({s['worker.jobs_run']:.0f} worker jobs)")
+    if args.trace_out:
+        n = eng.dump_trace(args.trace_out)
+        print(f"trace: {n} events -> {args.trace_out}")
+    if args.prom:
+        print(eng.metrics_prometheus(), end="")
     return 0
 
 

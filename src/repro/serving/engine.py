@@ -57,6 +57,7 @@ benchmarks drive.
 from __future__ import annotations
 
 import dataclasses
+import os
 import time
 from typing import Any, Dict, List, Optional, Tuple
 
@@ -77,6 +78,8 @@ from repro.core.scheduler import BatchPlan, Scheduler, SchedulerConfig
 from repro.launch.plane_mesh import PlaneMesh
 from repro.models import model as M
 from repro.models.common import ModelConfig
+from repro.obs.metrics import MetricsRegistry
+from repro.obs.tracing import NULL_TRACER, Tracer
 from repro.serving import costmodel as cm
 from repro.serving.metrics import ServingMetrics, compute_metrics
 from repro.serving.request import Phase, Request
@@ -194,6 +197,17 @@ class EngineConfig:
     # that re-selected the block, so the forward reads zeros under eviction
     # pressure and outputs diverge — supported for demonstration, default
     # off.  See docs/architecture.md §3.
+    obs: Optional[bool] = None
+    # True: the obs layer is live — the engine builds a Tracer (Chrome
+    # trace-event JSON, one lane per thread; see src/repro/obs/) and
+    # installs it on the planes, the KV manager and the HostStageWorker,
+    # and per-iteration scheduler gauges flow into the MetricsRegistry.
+    # None resolves from the environment (REPRO_OBS=1 enables) into a
+    # COPY, same as the knobs above.  Default off: hot paths pay one
+    # `tracer.enabled` attribute read per instrumentation point and emit
+    # nothing (NULL_TRACER), keeping greedy tokens byte-identical.
+    # `engine.metrics_snapshot()` works either way.
+    # See docs/architecture.md §11.
 
 
 @dataclasses.dataclass
@@ -295,6 +309,14 @@ class ServingEngine:
                 "drop_evicted_device_blocks only acts on a device plane "
                 "(batched_decode=True, decode_plane='staged' or "
                 "'persistent')")
+        if eng.obs is None:
+            # env opt-in so benches/CI can trace without touching configs;
+            # resolve into a COPY (same rationale as the knobs above)
+            eng = dataclasses.replace(
+                eng, obs=os.environ.get("REPRO_OBS", "") == "1")
+            self.eng = eng
+        self.tracer = Tracer() if eng.obs else NULL_TRACER
+        self.metrics = MetricsRegistry()
         self.mc = cm.ModelCost.from_config(cfg)
         self.rng = np.random.default_rng(eng.seed)
 
@@ -318,6 +340,7 @@ class ServingEngine:
                 ws_control=eng.ws_control),
             self.geom, cfg.num_layers, cfg.dsa.top_k_blocks)
         self.kv_mgr = KVCacheManager(self.geom, eng.hbm_budget_bytes)
+        self.kv_mgr.tracer = self.tracer
         self.states: Dict[str, _ReqState] = {}
         self._pending: List[Request] = []      # not yet arrived
         self.now = 0.0
@@ -337,11 +360,34 @@ class ServingEngine:
         self.admit_embed_launches = 0            # batched admission embeds
         self.hybrid = (HybridPlane(cfg)
                        if eng.hybrid_plane == "mixed" else None)
+        if self.hybrid is not None:
+            self.hybrid.tracer = self.tracer
         # async dispatch pipeline (stage_dispatch="async", the default):
         # per-layer FlashD2H write-back staging runs on this worker so the
         # dispatch thread's only per-layer device block is np.asarray(idx)
         self._stage_async = eng.stage_dispatch == "async"
         self._worker: Optional[HostStageWorker] = None
+        self.worker_jobs_run = 0      # folded in from retired workers at
+        self.worker_busy_s = 0.0      # close() so stats survive run()
+        # per-iteration scheduler/batch gauges (memoized instruments:
+        # one .set() per iteration, no name lookups on the hot path)
+        _m = self.metrics
+        self._g_queue = _m.gauge(
+            "sched.queue_depth", "requests waiting for admission")
+        self._g_running = _m.gauge(
+            "sched.running", "requests admitted (prefill+decode)")
+        self._g_batch_decode = _m.gauge(
+            "sched.batch_decode_rows", "decode rows this iteration")
+        self._g_batch_prefill = _m.gauge(
+            "sched.batch_prefill_rows", "prefill rows this iteration")
+        self._g_ws_decode = _m.gauge(
+            "sched.ws_decode_bytes", "estimated decode working set")
+        self._g_ws_prefill = _m.gauge(
+            "sched.ws_prefill_bytes", "estimated prefill working set")
+        self._g_hbm_used = _m.gauge(
+            "kv.hbm_used_bytes", "actual HBM residency after the iteration")
+        self._h_iter = _m.histogram(
+            "engine.iteration_s", "wall-clock seconds per engine iteration")
         self.mixed_iter_log: List[Dict[str, Any]] = []
         # per mixed iteration: per-layer fused d2h/h2d call counts, group
         # counts and the measured jitted-launch total — what
@@ -657,6 +703,7 @@ class ServingEngine:
         if plane is None:
             plane = self.prefill_planes[key] = PrefillPlane(
                 cfg, self.eng.bucketing, plane_mesh=self.plane_mesh)
+            plane.tracer = self.tracer
         plane.admit(st.req.req_id, h, segs, enc_list)
         self._req_prefill_plane[st.req.req_id] = plane
         st.decode_state = {"caches": [None] * cfg.num_layers,
@@ -1295,15 +1342,20 @@ class ServingEngine:
         """The engine's host-stage worker, created lazily (and re-created
         after ``close()``, so a closed engine can still step)."""
         if self._worker is None or self._worker.closed:
-            self._worker = HostStageWorker(name=f"host-stage-{id(self):x}")
+            self._worker = HostStageWorker(name=f"host-stage-{id(self):x}",
+                                           tracer=self.tracer)
         return self._worker
 
     def close(self) -> None:
         """Shut down the host-stage worker: drains outstanding write-back
         jobs (re-raising their errors) and joins the thread.  Idempotent;
-        ``run()`` calls it on exit."""
+        ``run()`` calls it on exit.  The worker's job/busy counters fold
+        into engine-level totals so ``metrics_snapshot()`` and the overlap
+        instruments keep working after shutdown."""
         if self._worker is not None:
             self._worker.close()
+            self.worker_jobs_run += self._worker.jobs_run
+            self.worker_busy_s += self._worker.busy_s
             self._worker = None
 
     def _stage_writeback_async(self, worker: HostStageWorker, lidx: int,
@@ -1429,6 +1481,7 @@ class ServingEngine:
             plane = self.planes[key] = DevicePoolPlane(
                 self.cfg, self.eng.bucketing, attn_impl=self.eng.attn_impl,
                 plane_mesh=self.plane_mesh)
+            plane.tracer = self.tracer
         for st in sts:
             rid = st.req.req_id
             if rid not in plane.rows:
@@ -1869,6 +1922,23 @@ class ServingEngine:
                 req.finish_time = self.now
         self.loads_per_iter.append(iter_loads)
         self.iterations += 1
+        # obs epilogue: outside the dispatch windows by construction (the
+        # planes and the worker have all returned / been drained)
+        wall_s = time.perf_counter() - t0
+        self._h_iter.observe(wall_s)
+        waiting, running = self.scheduler.queue_depths()
+        self._g_queue.set(waiting)
+        self._g_running.set(running)
+        self._g_batch_decode.set(len(plan.decode_reqs))
+        self._g_batch_prefill.set(len(plan.prefill_reqs))
+        self._g_ws_decode.set(plan.ws_decode_bytes)
+        self._g_ws_prefill.set(plan.ws_prefill_bytes)
+        self._g_hbm_used.set(self.kv_mgr.hbm_used_bytes())
+        if self.tracer.enabled:
+            self.tracer.complete_at(
+                "iteration", "engine", t0, wall_s, i=self.iterations - 1,
+                decode_rows=len(plan.decode_reqs),
+                prefill_rows=len(plan.prefill_reqs))
         return plan
 
     def run(self, max_iters: int = 10_000) -> ServingMetrics:
@@ -1888,3 +1958,124 @@ class ServingEngine:
     # ------------------------------------------------------------------
     def transfer_stats(self) -> TransferStats:
         return self.kv_mgr.total_stats()
+
+    # ------------------------------------------------------------------
+    # Observability surface (src/repro/obs, docs/architecture.md §11)
+    # ------------------------------------------------------------------
+    def metrics_snapshot(self) -> Dict[str, float]:
+        """One flat dict over every subsystem's counters — the single obs
+        surface (naming scheme: obs/metrics.py).  Registry instruments
+        (sched.* gauges, engine.iteration_s histogram) merge with derived
+        reads of the hot counters, which stay where the hot paths already
+        increment them.  Works with obs disabled; blocking-free but not
+        for dispatch windows (the analyzer flags it there)."""
+        self._g_hbm_used.set(self.kv_mgr.hbm_used_bytes())
+        snap = self.metrics.snapshot()
+        ts = self.kv_mgr.total_stats()
+        snap.update({
+            "kv.h2d_calls": float(ts.h2d_calls),
+            "kv.h2d_blocks": float(ts.h2d_blocks),
+            "kv.h2d_bytes": float(ts.h2d_bytes),
+            "kv.d2h_calls": float(ts.d2h_calls),
+            "kv.d2h_blocks": float(ts.d2h_blocks),
+            "kv.d2h_bytes": float(ts.d2h_bytes),
+            "kv.hits": float(ts.hits),
+            "kv.misses": float(ts.misses),
+            "kv.evictions": float(ts.evictions),
+            "kv.hbm_budget_bytes": float(self.eng.hbm_budget_bytes),
+            "engine.iterations": float(self.iterations),
+            "engine.now_s": float(self.now),
+            "engine.decode_step_calls": float(self.decode_step_calls),
+            "engine.decode_tokens": float(self.decode_tokens),
+            "engine.stack_calls": float(self.stack_calls),
+            "engine.prefill_launches": float(self.prefill_launches),
+            "engine.admit_embed_launches": float(self.admit_embed_launches),
+            "engine.prefill_hbm_peak_tokens":
+                float(self.prefill_hbm_peak_tokens),
+        })
+        host_syncs = d2h_rb = dropped = restored = before = steps = 0
+        sync_s = stage_s = 0.0
+        fns_seen: Dict[int, Any] = {}      # StageFns are shared per-config;
+        for plane in self.planes.values():  # dedup before summing traces
+            host_syncs += plane.host_syncs
+            d2h_rb += plane.d2h_readback_bytes
+            dropped += plane.blocks_dropped
+            restored += plane.blocks_restored
+            before += plane.blocks_restored_before_use
+            steps += plane.steps
+            sync_s += plane.dispatch_sync_s
+            stage_s += plane.host_stage_s
+            fns_seen[id(plane.staged_fns)] = plane.staged_fns
+        for pplane in self.prefill_planes.values():
+            fns_seen[id(pplane.fns)] = pplane.fns
+        if self.hybrid is not None:
+            sync_s += self.hybrid.dispatch_sync_s
+            stage_s += self.hybrid.host_stage_s
+        snap.update({
+            "plane.count": float(len(self.planes)),
+            "plane.steps": float(steps),
+            "plane.host_syncs": float(host_syncs),
+            "plane.d2h_readback_bytes": float(d2h_rb),
+            "plane.blocks_dropped": float(dropped),
+            "plane.blocks_restored": float(restored),
+            "plane.blocks_restored_before_use": float(before),
+            "plane.trace_count": float(sum(f.trace_count
+                                           for f in fns_seen.values())),
+            "plane.dispatch_sync_s": sync_s,
+            "plane.host_stage_s": stage_s,
+        })
+        w = self._worker
+        live = w is not None and not w.closed
+        snap.update({
+            "worker.jobs_run": float(self.worker_jobs_run
+                                     + (w.jobs_run if live else 0)),
+            "worker.busy_s": (self.worker_busy_s
+                              + (w.busy_s if live else 0.0)),
+            "obs.enabled": 1.0 if self.tracer.enabled else 0.0,
+            "obs.trace_events": float(len(self.tracer.events())),
+        })
+        return snap
+
+    def metrics_prometheus(self) -> str:
+        """Prometheus text exposition of :meth:`metrics_snapshot`."""
+        snap = self.metrics_snapshot()
+        reg_keys = set(self.metrics.snapshot())
+        extra = {k: v for k, v in snap.items() if k not in reg_keys}
+        return self.metrics.prometheus_text(extra)
+
+    def stage_overlap_measured(self) -> Optional[float]:
+        """Counter instrument for achieved async overlap: the fraction of
+        host-stage work that ran on the HostStageWorker thread,
+        ``busy_s / (busy_s + dispatch host_stage_s)``.  ``None`` when no
+        worker job ran (sync mode, or no staged decode).  Cross-checked
+        against the trace instrument (:meth:`stage_overlap_from_trace`)
+        by bench_overlap and the nightly assert."""
+        w = self._worker
+        busy = self.worker_busy_s + (w.busy_s if w is not None
+                                     and not w.closed else 0.0)
+        if busy <= 0.0:
+            return None
+        stage_s = sum(p.host_stage_s for p in self.planes.values())
+        if self.hybrid is not None:
+            stage_s += self.hybrid.host_stage_s
+        return busy / (busy + stage_s)
+
+    def stage_overlap_from_trace(self) -> Optional[float]:
+        """Trace instrument: span-interval overlap of worker-thread
+        host-stage spans with dispatch-thread iteration spans (see
+        obs/trace_analysis.py).  ``None`` with obs disabled or no worker
+        spans."""
+        from repro.obs.trace_analysis import achieved_overlap_fraction
+        if not self.tracer.enabled:
+            return None
+        return achieved_overlap_fraction(self.tracer.events())
+
+    def chrome_trace(self) -> Dict[str, Any]:
+        """The Chrome trace-event JSON object (empty when obs is off)."""
+        return self.tracer.chrome_trace()
+
+    def dump_trace(self, path: str) -> int:
+        """Write the Chrome trace JSON; returns the event count.
+        Blocking file I/O — only call between/after iterations (the
+        analyzer flags it inside async dispatch windows)."""
+        return self.tracer.dump_trace(path)

@@ -1,0 +1,77 @@
+"""serving/metrics p99 small-sample policy: below P99_MIN_SAMPLES the
+tail is None (explicitly unmeasured), and meets_slo states its policy —
+unmeasurable tails pass by default, fail under strict_p99."""
+import numpy as np
+
+from repro.serving.metrics import (P99_MIN_SAMPLES, _p99, compute_metrics,
+                                   meets_slo)
+from repro.serving.request import Request
+
+
+def _finished(n_reqs, tbt=0.01, gen=5):
+    """n finished requests, each with `gen` tokens at a steady `tbt`."""
+    reqs = []
+    for i in range(n_reqs):
+        r = Request(prompt_len=8, max_new_tokens=gen, arrival_time=0.0)
+        r.scheduled_time = 0.001
+        r.first_token_time = 0.01
+        r.token_times = [0.01 + k * tbt for k in range(gen)]
+        r.finish_time = r.token_times[-1]
+        r.generated = gen
+        reqs.append(r)
+    return reqs
+
+
+class TestP99:
+    def test_none_below_min_samples(self):
+        assert _p99([1.0] * (P99_MIN_SAMPLES - 1)) is None
+        assert _p99([]) is None
+
+    def test_float_at_min_samples(self):
+        xs = list(np.linspace(0.0, 1.0, P99_MIN_SAMPLES))
+        p = _p99(xs)
+        assert isinstance(p, float) and 0.9 <= p <= 1.0
+
+    def test_compute_metrics_small_batch_has_none_tails(self):
+        # 2 requests x 5 tokens = 8 TBT samples < P99_MIN_SAMPLES, and
+        # 2 TTFT samples < P99_MIN_SAMPLES: both tails unmeasured
+        m = compute_metrics(_finished(2), total_time=1.0)
+        assert m.p99_ttft is None and m.p99_tbt is None
+        assert np.isfinite(m.mean_ttft) and np.isfinite(m.mean_tbt)
+        assert m.num_finished == 2
+
+    def test_compute_metrics_large_batch_measures_tails(self):
+        m = compute_metrics(_finished(12), total_time=1.0)
+        assert isinstance(m.p99_ttft, float)
+        assert isinstance(m.p99_tbt, float)
+        assert abs(m.p99_tbt - 0.01) < 1e-12
+
+
+class TestMeetsSlo:
+    def test_unmeasured_tail_passes_by_default(self):
+        reqs = _finished(2)                      # p99 is None
+        assert meets_slo(reqs, 1.0, p99_tbt_limit=1e-9)
+
+    def test_unmeasured_tail_fails_under_strict(self):
+        reqs = _finished(2)
+        assert not meets_slo(reqs, 1.0, p99_tbt_limit=1e9, strict_p99=True)
+
+    def test_measured_violation_fails(self):
+        reqs = _finished(12, tbt=0.05)
+        assert not meets_slo(reqs, 1.0, p99_tbt_limit=0.02)
+
+    def test_measured_pass(self):
+        reqs = _finished(12, tbt=0.005)
+        assert meets_slo(reqs, 1.0, p99_tbt_limit=0.02)
+        assert meets_slo(reqs, 1.0, p99_tbt_limit=0.02, strict_p99=True)
+
+    def test_queue_delay_gate(self):
+        reqs = _finished(12)
+        for r in reqs:
+            r.scheduled_time = 5.0               # 5 s queue delay
+        assert not meets_slo(reqs, 10.0, p99_tbt_limit=1.0,
+                             mean_queue_limit=2.0)
+
+    def test_no_finished_fails(self):
+        r = Request(prompt_len=8, max_new_tokens=4)
+        assert not meets_slo([r], 1.0, p99_tbt_limit=1.0)

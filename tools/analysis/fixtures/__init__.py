@@ -97,6 +97,9 @@ FIXTURES = {
     "bad_np_in_jit": (
         _jit_target("bad_np_in_jit", "bad_np_in_jit.py"),
         pc.RULE_NP_IN_JIT),
+    "bad_obs_in_jit": (
+        _jit_target("bad_obs_in_jit", "bad_obs_in_jit.py"),
+        pc.RULE_OBS_IN_JIT),
     "bad_unhashable_key": (
         _registry_target("bad_unhashable_key", "bad_unhashable_key.py",
                          "fns_for", ("cfg", "plane_mesh"),

@@ -1,0 +1,17 @@
+"""Seeded violation: a tracer span emitted inside a jitted stage body.
+
+The obs layer is host-side — a ``tracer.end(...)`` here runs once while
+jax traces the function and never again, so the span silently vanishes
+from every subsequent launch (and a counter would undercount by
+iterations-1).  Instrumentation belongs in the DRIVER, around the stage
+launch (see ``DevicePoolPlane.step_staged``).
+"""
+
+
+def build(wrap, tracer):
+    def attend(p, x):
+        h = x @ p["w"]
+        tracer.end("attend", "stage", 0.0)
+        return h
+
+    return wrap("attend", attend)

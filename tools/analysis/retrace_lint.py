@@ -93,6 +93,27 @@ def _np_root(node: ast.AST) -> Optional[str]:
     return None
 
 
+def _obs_root(f: ast.Attribute) -> Optional[str]:
+    """The obs-layer name a call is rooted at (``tracer.end(...)``,
+    ``self.metrics.counter(..).inc()`` -> "tracer" / "metrics"), else
+    None.  Matches by name against ``pc.OBS_ROOT_NAMES`` — the repo-wide
+    convention that those identifiers mean the obs layer — so the check
+    needs no type information."""
+    node: ast.AST = f.value
+    while True:
+        if isinstance(node, ast.Attribute):
+            if node.attr in pc.OBS_ROOT_NAMES:
+                return node.attr
+            node = node.value
+        elif isinstance(node, ast.Call):
+            node = node.func
+        else:
+            break
+    if isinstance(node, ast.Name) and node.id in pc.OBS_ROOT_NAMES:
+        return node.id
+    return None
+
+
 class _JitBodyLint:
     def __init__(self, file: str, stage: str, fn, findings: List[Finding]):
         self.file = file
@@ -152,6 +173,13 @@ class _JitBodyLint:
                        f"np.{f.attr}() on a traced value inside a jit "
                        f"body — numpy constant-folds tracers or raises; "
                        f"use jnp")
+        if isinstance(f, ast.Attribute) and _obs_root(f):
+            self._flag(pc.RULE_OBS_IN_JIT, call,
+                       f"obs call ({_obs_root(f)}.{f.attr}(...)) inside a "
+                       f"jit body — a host side effect here fires once at "
+                       f"TRACE time and never again (spans vanish, "
+                       f"counters undercount); instrument the driver "
+                       f"around the stage launch instead")
 
 
 def _iter_jit_bodies(tree: ast.Module):

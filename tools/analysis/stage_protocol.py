@@ -299,10 +299,17 @@ def check_driver(repo_root: Path, driver: pc.DriverSpec,
             if not e.in_callback:
                 continue
             if e.kind == "sync":
-                flag(pc.RULE_NO_SYNC_IN_DISPATCH_WINDOW, e,
-                     f"host-blocking sync ({e.call}) inside the async "
-                     f"dispatch window — the driver's selection sync is "
-                     f"the only allowed per-layer block")
+                if e.sub == "obs":
+                    flag(pc.RULE_NO_SYNC_IN_DISPATCH_WINDOW, e,
+                         f"blocking obs call ({e.call}) inside the async "
+                         f"dispatch window — trace dumps and metric "
+                         f"snapshots belong between iterations; guarded "
+                         f"span emission is the only obs allowed here")
+                else:
+                    flag(pc.RULE_NO_SYNC_IN_DISPATCH_WINDOW, e,
+                         f"host-blocking sync ({e.call}) inside the async "
+                         f"dispatch window — the driver's selection sync is "
+                         f"the only allowed per-layer block")
             elif e.kind in ("pool-read", "ctx-read") and e.sub == "":
                 flag(pc.RULE_NO_SYNC_IN_DISPATCH_WINDOW, e,
                      f"blocking readback ({e.call}) inside the async "
