@@ -5,6 +5,14 @@ ATTENTION-OUTPUT FIDELITY: relative L2 error and cosine similarity of the
 DSA decode output vs full attention, per token budget, on real model
 forwards with adversarially long contexts.  The paper's claim (budget 2048
 retains 99% accuracy) maps to cosine >= 0.99 at budget >= context/4.
+
+quant_fidelity: the same bound for the int8 DRAM offload tier — the REAL
+engine with ``offload_quant="int8"`` vs ``"none"`` under 1-block-LRU
+eviction pressure (every selected block quantizes on FlashD2H save and
+dequantizes on FlashH2D restore, every iteration).  Per decode position,
+logits cosine is computed over the common greedy prefix (identical
+contexts, so only quant noise separates the runs); the emitted
+``min_cosine``/``mean_cosine`` must stay >= 0.99.
 """
 from __future__ import annotations
 
@@ -24,6 +32,65 @@ import numpy as np
 from benchmarks.common import emit, header
 from repro.configs import get_smoke_config
 from repro.models import model as M
+
+
+def quant_fidelity_section() -> None:
+    """int8 offload tier fidelity vs the fp tier on the REAL engine (see
+    module docstring for the methodology)."""
+    from repro.serving.engine import EngineConfig, ServingEngine
+    from repro.serving.request import Request
+
+    header("quant_fidelity: int8 offload tier vs fp, real engine decode "
+           "(1-block LRU eviction pressure)")
+    cfg = get_smoke_config("qwen2-0.5b")
+    params = M.init_params(cfg, jax.random.PRNGKey(0), jnp.float32)
+
+    def run(quant):
+        eng = ServingEngine(params, cfg, EngineConfig(
+            chunk_size=64, r_max=4, hbm_blocks_per_request=1,
+            offload_quant=quant))
+        rng = np.random.default_rng(7)
+        order = []
+        for _ in range(2):
+            r = Request(prompt_len=64, max_new_tokens=10)
+            eng.submit(r, tokens=rng.integers(4, cfg.vocab_size,
+                                              64).astype(np.int32))
+            order.append(r.req_id)
+        logits = {rid: {} for rid in order}
+        while eng.step() is not None:
+            for rid in order:
+                st = eng.states.get(rid)
+                if st is None or st.last_logits is None \
+                        or not st.out_tokens:
+                    continue
+                i = len(st.out_tokens) - 1
+                if i not in logits[rid]:
+                    logits[rid][i] = np.asarray(st.last_logits,
+                                                np.float64).ravel()
+        return ([eng.states[r].out_tokens for r in order],
+                [logits[r] for r in order])
+
+    toks_fp, log_fp = run("none")
+    toks_q8, log_q8 = run("int8")
+    cosines = []
+    compared = matched = total = 0
+    for tf, tq, lf, lq in zip(toks_fp, toks_q8, log_fp, log_q8):
+        total += len(tf)
+        # positions with identical context: the common greedy prefix plus
+        # the first divergent position (same inputs, argmax flipped)
+        div = next((i for i, (a, b) in enumerate(zip(tf, tq)) if a != b),
+                   len(tf) - 1)
+        matched += sum(a == b for a, b in zip(tf, tq))
+        for i in range(div + 1):
+            a, b = lf[i], lq[i]
+            cosines.append(a @ b / (np.linalg.norm(a)
+                                    * np.linalg.norm(b)))
+            compared += 1
+    emit("quant_fidelity", tier="int8",
+         min_cosine=round(float(np.min(cosines)), 5),
+         mean_cosine=round(float(np.mean(cosines)), 5),
+         positions_compared=compared,
+         greedy_match_frac=round(matched / max(total, 1), 3))
 
 
 def main() -> None:
@@ -54,6 +121,7 @@ def main() -> None:
         emit("table1", budget=budget, context=S,
              rel_l2=round(float(rel), 5), cosine=round(cos, 5),
              top1_match=same_top1)
+    quant_fidelity_section()
 
 
 if __name__ == "__main__":

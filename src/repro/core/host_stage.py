@@ -28,6 +28,15 @@ copying: the dispatched gather closes over the pool *value* at dispatch
 time, so later pool-mutating stages (which produce new buffers — the
 donated input buffers are only reused once no live reference remains)
 never alter what the worker reads back.
+
+The quantized offload tier (``EngineConfig.offload_quant="int8"``) rides
+these same jobs unchanged: quantization happens inside the pool's
+``flush`` (per-block, on this worker thread), so the fence semantics
+above are exactly what guarantees a gather never observes a
+half-quantized block — ``fence(lidx)`` orders the whole
+stage-quantize-store sequence before any same-layer gather, and
+``drain()`` orders it before pool teardown.  Only the booked byte counts
+differ (wire size; see ``HostPool.stage``).
 """
 from __future__ import annotations
 

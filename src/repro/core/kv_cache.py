@@ -36,23 +36,52 @@ class KVGeometry:
 
     @property
     def block_bytes_per_head(self) -> int:
+        """Bytes of ONE block for ONE kv head at the MODELED device dtype
+        (``dtype_bytes``, bf16 by default), K and V together
+        (``kv_factor``).  This is the deployment-sized unit the cost model
+        charges transfers in; it is independent of the f32 numpy pools the
+        smoke data plane happens to hold, and of the offload tier's stored
+        size (``HostPool.wire_bytes`` for that)."""
         return self.block_size * self.head_dim * self.dtype_bytes * self.kv_factor
 
     @property
     def block_bytes(self) -> int:
-        """One block id across all layers+heads (working-set accounting)."""
+        """One block id across ALL layers and kv heads — the working-set
+        unit (bytes per entry of a request's block table).  Scheduler
+        admission (M_avl) and working-set estimates use this; per-transfer
+        accounting uses the per-(layer, head) slices instead."""
         return self.block_bytes_per_head * self.num_kv_heads * self.num_layers
 
     def tokens_bytes(self, n_tokens: int) -> int:
+        """Logical KV bytes of ``n_tokens`` across all layers/heads at the
+        modeled dtype (no block-size round-up)."""
         return (n_tokens * self.head_dim * self.dtype_bytes * self.kv_factor
                 * self.num_kv_heads * self.num_layers)
 
 
 @dataclasses.dataclass
 class TransferStats:
-    h2d_bytes: int = 0
+    """PCIe/DMA traffic counters, booked exactly once per moved byte.
+
+    Units: ``*_bytes`` are bytes AS STORED IN THE OFFLOAD TIER (the wire
+    size of the DMA) — under ``offload_quant="int8"`` that is the int8
+    payload plus 4 B per (kv-head, block) scale, NOT the logical fp size;
+    with the default fp tier the two coincide.  ``*_calls`` count fused
+    kernel launches (one FlashH2D/FlashD2H per layer per iteration under
+    batching), ``*_blocks`` count (block x kv-head) units moved.
+
+    Who books what (the staged-vs-accounted split): ``HBMCache.access``
+    books residency only (hits/misses/evictions); ``HostPool.stage``
+    appends to staging WITHOUT booking (it returns the wire bytes so the
+    one fused caller can book them); bytes/calls land at the single fused
+    data-plane call (``KVCacheManager.load_blocks_fused`` /
+    ``save_new_tokens_fused`` on ``fused_stats``, or the per-request
+    ``HostPool.load_blocks`` / ``save_contiguous``); ``HostPool.flush``
+    books ``d2h_blocks`` only — a staged byte is never counted twice.
+    """
+    h2d_bytes: int = 0          # wire bytes (stored size, see above)
     h2d_calls: int = 0          # fused kernel launches (FlashH2D)
-    h2d_blocks: int = 0         # fragmented blocks moved
+    h2d_blocks: int = 0         # fragmented (block x kv-head) units moved
     d2h_bytes: int = 0
     d2h_calls: int = 0
     d2h_blocks: int = 0
@@ -148,6 +177,34 @@ class HBMCache:
         return len(keys)
 
 
+QUANT_SCALE_BYTES = 4  # one f32 scale per (kv-head, block) per tensor
+
+
+def _quantize_block_np(x: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
+    """Symmetric int8 quantization of one block, per kv head.
+
+    x: (Hkv, bs, D) fp -> (q (Hkv, bs, D) int8, scales (Hkv,) f32) with
+    scale = amax/127 per head; matches ``kernels.ref.quantize_blocks``
+    bit-for-bit (``np.rint`` == ``jnp.rint``, round-half-to-even)."""
+    xf = x.astype(np.float32)
+    amax = np.max(np.abs(xf), axis=(1, 2))
+    scales = (amax / 127.0).astype(np.float32)
+    # reciprocal-multiply in f32, same as the kernel/ref paths — division
+    # here would flip exact .5 rounding boundaries vs the kernels
+    inv = np.where(scales > 0.0,
+                   np.float32(1.0) / np.where(scales > 0.0, scales,
+                                              np.float32(1.0)),
+                   np.float32(1.0)).astype(np.float32)
+    q = np.clip(np.rint(xf * inv[:, None, None]), -127, 127).astype(np.int8)
+    return q, scales
+
+
+def _dequantize_block_np(q: np.ndarray, scales: np.ndarray) -> np.ndarray:
+    """Inverse of ``_quantize_block_np``: (Hkv, bs, D) int8 + (Hkv,) f32
+    -> (Hkv, bs, D) f32."""
+    return q.astype(np.float32) * scales[:, None, None]
+
+
 class HostPool:
     """Host-DRAM block pool for ONE request (data plane).
 
@@ -155,18 +212,55 @@ class HostPool:
     follows FlashD2H: the contiguous per-iteration KV stripe is appended to
     a staging buffer in one "memcpy" and scattered into blocks lazily
     (``flush``), mirroring the paper's CPU-assisted two-phase save.
+
+    ``quant="int8"`` switches the pool to the quantized offload tier: the
+    K/V arrays hold int8 with per-(layer, kv-head, block) f32 scales
+    (``k_scale``/``v_scale``), blocks quantize at ``flush`` and dequantize
+    at ``gather``, and every byte counter reports the STORED size (int8
+    payload + scales), not the logical fp size — so TransferStats, the obs
+    spans, and the cost model all see the ~``dtype_bytes``x wire shrink.
+    The staging buffer keeps fp stripes in both modes (quantization is
+    per-block, so it must wait for the block scatter).
     """
 
-    def __init__(self, geom: KVGeometry, num_blocks: int):
+    def __init__(self, geom: KVGeometry, num_blocks: int,
+                 quant: str = "none"):
+        if quant not in ("none", "int8"):
+            raise ValueError(f"HostPool: unknown quant mode {quant!r}")
         g = geom
         self.geom = g
         self.num_blocks = num_blocks
+        self.quant = quant
         shape = (g.num_layers, g.num_kv_heads, num_blocks, g.block_size,
                  g.head_dim)
-        self.k = np.zeros(shape, np.float32)
-        self.v = np.zeros(shape, np.float32) if g.kv_factor == 2 else None
+        dt = np.int8 if quant == "int8" else np.float32
+        self.k = np.zeros(shape, dt)
+        self.v = np.zeros(shape, dt) if g.kv_factor == 2 else None
+        if quant == "int8":
+            sshape = (g.num_layers, g.num_kv_heads, num_blocks)
+            self.k_scale = np.zeros(sshape, np.float32)
+            self.v_scale = np.zeros(sshape, np.float32) \
+                if self.v is not None else None
+        else:
+            self.k_scale = self.v_scale = None
         self._staging: List[Tuple[int, int, np.ndarray, Optional[np.ndarray]]] = []
         self.stats = TransferStats()
+
+    def wire_bytes(self, n_blocks: int) -> int:
+        """Bytes ``n_blocks`` whole blocks occupy AS STORED in this pool —
+        the wire size of moving them (one layer, all kv heads, K+V).
+
+        fp tier: elems x itemsize of the numpy arrays.  int8 tier: 1 B per
+        element plus ``QUANT_SCALE_BYTES`` per (kv-head, block) per tensor.
+        Every h2d/d2h byte counter for this pool is derived from this."""
+        g = self.geom
+        elems_per_head = g.block_size * g.head_dim
+        if self.quant == "int8":
+            per_head = elems_per_head + QUANT_SCALE_BYTES
+        else:
+            per_head = elems_per_head * self.k.itemsize
+        kvf = 2 if self.v is not None else 1
+        return n_blocks * g.num_kv_heads * per_head * kvf
 
     def stage(self, layer: int, start_token: int, k_new: np.ndarray,
               v_new: Optional[np.ndarray]) -> int:
@@ -180,8 +274,14 @@ class HostPool:
         [start_token, start_token+T) must fit the pool registered at
         ``KVCacheManager.register`` time — out-of-range stripes raise
         ``ValueError`` immediately rather than corrupting block state.
-        Returns the stripe's byte size (both K and V)."""
-        end_token = start_token + k_new.shape[1]
+
+        Returns the stripe's WIRE byte size for the caller to book: the
+        fp stripe bytes (K+V) in the default tier, or — under
+        ``quant="int8"`` — the int8 payload plus one scale per touched
+        (kv-head, block) per tensor, i.e. the size the D2H DMA actually
+        moves when ``quantize_blocks`` is fused into the save path."""
+        T = k_new.shape[1]
+        end_token = start_token + T
         max_tokens = self.num_blocks * self.geom.block_size
         if start_token < 0 or end_token > max_tokens:
             raise ValueError(
@@ -191,7 +291,14 @@ class HostPool:
                 f"register the request with a larger max_tokens")
         self._staging.append((layer, start_token, np.asarray(k_new),
                               None if v_new is None else np.asarray(v_new)))
-        return k_new.nbytes * (2 if v_new is not None else 1)
+        kvf = 2 if v_new is not None else 1
+        if self.quant == "int8" and T > 0:
+            bs = self.geom.block_size
+            touched = (end_token - 1) // bs - start_token // bs + 1
+            elems = T * self.geom.num_kv_heads * k_new.shape[2]
+            scale_b = touched * self.geom.num_kv_heads * QUANT_SCALE_BYTES
+            return (elems + scale_b) * kvf
+        return k_new.nbytes * kvf
 
     def save_contiguous(self, layer: int, start_token: int, k_new: np.ndarray,
                         v_new: Optional[np.ndarray]) -> None:
@@ -205,9 +312,40 @@ class HostPool:
         self.stats.d2h_calls += 1
         self.stats.d2h_bytes += nbytes
 
+    def _store_quant_span(self, layer: int, blk: int, off: int,
+                          stripe_k: np.ndarray,
+                          stripe_v: Optional[np.ndarray]) -> None:
+        """int8-tier block update: dequantize the resident block with its
+        current per-head scales, overwrite tokens [off, off+n), then
+        requantize the whole block with fresh scales.  Partial-block
+        appends therefore requantize previously stored tokens — the drift
+        is bounded (each token requantizes at most bs-1 times with scales
+        that only grow as the block fills) and covered by the fidelity
+        tests in ``tests/test_quant_kv.py``."""
+        n = stripe_k.shape[1]
+        cur_k = _dequantize_block_np(self.k[layer, :, blk],
+                                     self.k_scale[layer, :, blk])
+        cur_k[:, off:off + n] = stripe_k
+        self.k[layer, :, blk], self.k_scale[layer, :, blk] = \
+            _quantize_block_np(cur_k)
+        if stripe_v is not None:
+            cur_v = _dequantize_block_np(self.v[layer, :, blk],
+                                         self.v_scale[layer, :, blk])
+            cur_v[:, off:off + n] = stripe_v
+            self.v[layer, :, blk], self.v_scale[layer, :, blk] = \
+                _quantize_block_np(cur_v)
+
     def flush(self) -> int:
         """Phase 2 of FlashD2H: CPU-side scatter of staged stripes into the
-        per-head block layout.  Returns blocks written."""
+        per-head block layout.  Returns blocks written (block-boundary
+        segments; a stripe spanning two blocks writes two).
+
+        Accounting: books ``d2h_blocks`` ONLY — the stripe's bytes and the
+        fused launch were already booked when the stripe was staged
+        (``save_contiguous`` / ``save_new_tokens_fused``), so flushing
+        never double-counts.  In the int8 tier each touched block is
+        (re)quantized here with fresh per-head scales — the numpy twin of
+        fusing ``kernels.quantize_blocks`` into the D2H scatter."""
         g = self.geom
         written = 0
         for layer, start, k_new, v_new in self._staging:
@@ -223,9 +361,16 @@ class HostPool:
                         f"{self.num_blocks} blocks")
                 # split on block boundaries (start may be mid-block)
                 t1 = min(t0 + (g.block_size - off), T)
-                self.k[layer, :, blk, off:off + (t1 - t0)] = k_new[:, t0:t1]
-                if v_new is not None:
-                    self.v[layer, :, blk, off:off + (t1 - t0)] = v_new[:, t0:t1]
+                if self.quant == "int8":
+                    self._store_quant_span(
+                        layer, blk, off, k_new[:, t0:t1],
+                        None if v_new is None else v_new[:, t0:t1])
+                else:
+                    self.k[layer, :, blk, off:off + (t1 - t0)] = \
+                        k_new[:, t0:t1]
+                    if v_new is not None:
+                        self.v[layer, :, blk, off:off + (t1 - t0)] = \
+                            v_new[:, t0:t1]
                 written += 1
                 self.stats.d2h_blocks += 1
                 t0 = t1
@@ -236,9 +381,14 @@ class HostPool:
                ) -> Tuple[np.ndarray, Optional[np.ndarray]]:
         """Data-plane gather of fragmented blocks — NO accounting.
 
-        Returns (k (Hkv, K, bs, D), v or None).  Callers that represent one
-        fused kernel launch record the h2d_* stats themselves (either
-        ``load_blocks`` below or ``KVCacheManager.load_blocks_fused``)."""
+        Returns (k (Hkv, K, bs, D), v or None), always in the COMPUTE
+        dtype: the int8 tier dequantizes here with the stored per-head
+        scales (the numpy twin of ``kernels.dequantize_scatter_blocks``),
+        so downstream restore-into-device-slots is tier-agnostic.  Callers
+        that represent one fused kernel launch record the h2d_* stats
+        themselves (either ``load_blocks`` below or
+        ``KVCacheManager.load_blocks_fused``) — at ``wire_bytes`` size,
+        because the H2D DMA moves the stored payload, not this fp copy."""
         if blocks and (max(blocks) >= self.num_blocks or min(blocks) < 0):
             bad = max(blocks) if max(blocks) >= self.num_blocks \
                 else min(blocks)
@@ -248,18 +398,27 @@ class HostPool:
         idx = np.asarray(blocks, np.int32)
         k = self.k[layer][:, idx]
         v = None if self.v is None else self.v[layer][:, idx]
+        if self.quant == "int8":
+            ks = self.k_scale[layer][:, idx]            # (Hkv, K)
+            k = k.astype(np.float32) * ks[..., None, None]
+            if v is not None:
+                vs = self.v_scale[layer][:, idx]
+                v = v.astype(np.float32) * vs[..., None, None]
         return k, v
 
     def load_blocks(self, layer: int, blocks: List[int]
                     ) -> Tuple[np.ndarray, Optional[np.ndarray]]:
         """FlashH2D data plane: ONE fused gather of fragmented blocks.
 
-        Returns (k (Hkv, K, bs, D), v or None)."""
+        Returns (k (Hkv, K, bs, D), v or None) in the compute dtype.
+        Books one ``h2d_calls`` launch, ``h2d_blocks`` in (block x
+        kv-head) units, and ``h2d_bytes`` at the pool's STORED size
+        (``wire_bytes``) — int8 payload + scales under the quantized
+        tier, fp bytes otherwise."""
         k, v = self.gather(layer, blocks)
-        nbytes = k.nbytes * (1 if v is None else 2)
         self.stats.h2d_calls += 1
         self.stats.h2d_blocks += len(blocks) * self.geom.num_kv_heads
-        self.stats.h2d_bytes += nbytes
+        self.stats.h2d_bytes += self.wire_bytes(len(blocks))
         return k, v
 
 
@@ -268,10 +427,15 @@ class KVCacheManager:
     HBM budget (M_avl feeds the scheduler's Algorithm 1)."""
 
     def __init__(self, geom: KVGeometry, hbm_budget_bytes: int,
-                 host_budget_bytes: Optional[int] = None):
+                 host_budget_bytes: Optional[int] = None,
+                 offload_quant: str = "none"):
+        if offload_quant not in ("none", "int8"):
+            raise ValueError(
+                f"KVCacheManager: unknown offload_quant {offload_quant!r}")
         self.geom = geom
         self.hbm_budget_bytes = hbm_budget_bytes
         self.host_budget_bytes = host_budget_bytes
+        self.offload_quant = offload_quant
         self.caches: Dict[str, HBMCache] = {}
         self.pools: Dict[str, HostPool] = {}
         self._retired_stats = TransferStats()   # stats of released requests
@@ -284,7 +448,8 @@ class KVCacheManager:
                  hbm_blocks_per_request: int) -> None:
         nb = -(-max_tokens // self.geom.block_size)
         self.caches[req_id] = HBMCache(self.geom, hbm_blocks_per_request)
-        self.pools[req_id] = HostPool(self.geom, nb)
+        self.pools[req_id] = HostPool(self.geom, nb,
+                                      quant=self.offload_quant)
 
     def release(self, req_id: str) -> None:
         c = self.caches.pop(req_id, None)
@@ -343,7 +508,8 @@ class KVCacheManager:
         only here for these transfers (``HBMCache.access`` books residency
         only), so each moved block is counted exactly once: h2d_calls in
         fused launches, h2d_blocks in (block x kv-head) units, h2d_bytes in
-        bytes of K+V payload.
+        K+V payload bytes AT STORED SIZE (``HostPool.wire_bytes`` — int8 +
+        scales under ``offload_quant="int8"``, fp bytes otherwise).
 
         `layer` is the attention-layer ORDINAL (0..geom.num_layers-1), not
         the model layer id; `blocks_by_req` values are block ids, each
@@ -365,7 +531,7 @@ class KVCacheManager:
             k, v = pool.gather(layer, blocks)
             out[req_id] = (k, v)
             total_blocks += len(blocks) * self.geom.num_kv_heads
-            total_bytes += k.nbytes * (1 if v is None else 2)
+            total_bytes += pool.wire_bytes(len(blocks))
         if total_blocks:
             self.fused_stats.h2d_calls += 1
             self.fused_stats.h2d_blocks += total_blocks
@@ -393,9 +559,13 @@ class KVCacheManager:
         ``d2h_calls`` is booked ONCE here (on ``fused_stats``) while each
         pool stages its stripe without accounting (``HostPool.stage``).
         The CPU-side scatter into blocks still happens at each pool's
-        ``flush``.  Keeping the host pool a byte-exact superset of device
-        KV is what makes ``load_blocks_fused`` payloads safe to scatter
-        straight into device slots."""
+        ``flush``.  With the default fp tier the host pool stays a
+        byte-exact superset of device KV; under ``offload_quant="int8"``
+        it is a BOUNDED-ERROR superset (per-block per-head scales), and
+        either way ``load_blocks_fused`` payloads come back in the compute
+        dtype — dequantized at gather — so they stay safe to scatter
+        straight into device slots.  Staged bytes are booked at wire size
+        (see ``HostPool.stage``)."""
         tr = self.tracer
         if tr.enabled:
             _ts = time.perf_counter()

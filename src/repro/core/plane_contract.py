@@ -119,6 +119,18 @@ EFFECT_OF_CALL: Dict[str, Tuple[str, str]] = {
     "load_blocks_fused": ("h2d", "fused"),
     "restore_blocks_fused": ("restore", "fused"),
     "restore_blocks": ("restore", "unfused"),
+    # quantized offload tier (kernels/quant_blocks.py).  The (de)quant
+    # kernels are PART of their fused transfer, not transfers themselves —
+    # kind "quant" is deliberately outside the d2h/h2d/restore kinds the
+    # fused-transfer window counter sums, so a driver fusing
+    # quantize into its one FlashD2H save (or dequantize into its one
+    # FlashH2D restore) still shows exactly one fused op per layer.
+    # dequantize_scatter_blocks IS the restore (quantized
+    # scatter_blocks_hkv), so it counts like restore_blocks_fused: a
+    # driver issuing both in one window is a double restore.
+    "quantize_blocks": ("quant", "d2h"),
+    "dequantize_blocks": ("quant", "h2d"),
+    "dequantize_scatter_blocks": ("restore", "fused"),
     # eviction
     "drop_blocks": ("drop", "direct"),
     "_drop_pending_evictions": ("drop", "deferred"),

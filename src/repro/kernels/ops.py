@@ -13,6 +13,10 @@ from repro.kernels.block_score import block_score as _block_score
 from repro.kernels.flash_prefill import flash_prefill as _flash_prefill
 from repro.kernels.gather_blocks import gather_blocks as _gather_blocks
 from repro.kernels.gather_blocks import gather_blocks_hkv as _gather_blocks_hkv
+from repro.kernels.quant_blocks import dequantize_blocks as _dequantize_blocks
+from repro.kernels.quant_blocks import (
+    dequantize_scatter_blocks as _dequantize_scatter_blocks)
+from repro.kernels.quant_blocks import quantize_blocks as _quantize_blocks
 from repro.kernels.scatter_blocks import scatter_blocks as _scatter_blocks
 from repro.kernels.scatter_blocks import (
     scatter_blocks_hkv as _scatter_blocks_hkv)
@@ -36,6 +40,19 @@ def gather_blocks_hkv(pool, idx):
 
 def scatter_blocks_hkv(pool, new_kv, dest_blocks):
     return _scatter_blocks_hkv(pool, new_kv, dest_blocks, interpret=INTERPRET)
+
+
+def quantize_blocks(blocks):
+    return _quantize_blocks(blocks, interpret=INTERPRET)
+
+
+def dequantize_blocks(q, scales):
+    return _dequantize_blocks(q, scales, interpret=INTERPRET)
+
+
+def dequantize_scatter_blocks(pool, q, scales, dest_blocks):
+    return _dequantize_scatter_blocks(pool, q, scales, dest_blocks,
+                                      interpret=INTERPRET)
 
 
 def block_score(q, meta_min, meta_max, nb_tile: int = 128):

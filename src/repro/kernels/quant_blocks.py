@@ -1,0 +1,151 @@
+"""int8 KV-block (de)quantization for the DRAM offload tier (§3.2 + ROADMAP
+"quantized DRAM tier").
+
+The quantized tier stores offloaded KV blocks as symmetric int8 with ONE
+f32 scale per (kv-head, block): ``scale = amax(block)/127``,
+``q = clip(round(x/scale), -127, 127)``, ``dequant = q * scale``.  Per-head
+scales matter because K/V magnitude varies strongly across kv heads; a
+per-tensor scale would crush small-magnitude heads' resolution.
+
+Three kernels, mirroring the fp transfer pair:
+
+- ``quantize_blocks``  — fuses into the FlashD2H save path: the gathered
+  per-head block stripe quantizes on the way to the DRAM staging buffer,
+  so the D2H DMA moves ~1/dtype_bytes of the fp payload plus 4 B/head/block
+  of scales.
+- ``dequantize_blocks`` — the FlashH2D inverse: int8 payload + scales back
+  to the compute dtype after the (now smaller) H2D DMA.
+- ``dequantize_scatter_blocks`` — ``scatter_blocks_hkv`` with the dequant
+  fused in: lands int8 restore payloads straight into a request's fp
+  device slots in one launch (restore-before-use stays a single fused op).
+
+All are validated in interpret mode against the ``ref.py`` oracles.
+Rounding is ``jnp.rint`` (round-half-to-even) so the numpy host-pool path
+(``np.rint``) is bit-identical to the kernel path.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _quant_kernel(blk_ref, q_ref, scale_ref):
+    x = blk_ref[...].astype(jnp.float32)
+    amax = jnp.max(jnp.abs(x))
+    scale = amax / 127.0
+    # explicit reciprocal-multiply (not x/scale): XLA rewrites division to
+    # reciprocal-multiply in some contexts and not others, which flips
+    # exact .5 rounding boundaries — this keeps the kernel, the jnp ref
+    # oracle and the numpy host-pool path bit-identical
+    inv = jnp.where(scale > 0.0, 1.0 / jnp.where(scale > 0.0, scale, 1.0),
+                    1.0)
+    scale_ref[...] = jnp.full(scale_ref.shape, scale, jnp.float32)
+    q_ref[...] = jnp.clip(jnp.rint(x * inv), -127.0, 127.0).astype(jnp.int8)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def quantize_blocks(blocks: jax.Array, *, interpret: bool = True
+                    ) -> tuple[jax.Array, jax.Array]:
+    """blocks: (H, K, bs, D) fp -> (q (H, K, bs, D) int8, scales (H, K) f32).
+
+    One grid step per (kv-head, block); the amax reduction and the
+    divide/round run on the VPU over the (bs, D) tile.  int8 tiles want
+    (32, 128) alignment on real TPUs — block_size >= 32 and head_dim a
+    multiple of 128 satisfy it; interpret mode accepts any shape."""
+    H, K, bs, D = blocks.shape
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=0,
+        grid=(H, K),
+        in_specs=[pl.BlockSpec((1, 1, bs, D), lambda h, i: (h, i, 0, 0))],
+        out_specs=[
+            pl.BlockSpec((1, 1, bs, D), lambda h, i: (h, i, 0, 0)),
+            pl.BlockSpec((1, 1), lambda h, i: (h, i)),
+        ],
+    )
+    return pl.pallas_call(
+        _quant_kernel,
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((H, K, bs, D), jnp.int8),
+            jax.ShapeDtypeStruct((H, K), jnp.float32),
+        ],
+        interpret=interpret,
+    )(blocks)
+
+
+def _dequant_kernel(q_ref, scale_ref, out_ref):
+    scale = scale_ref[0, 0]
+    out_ref[...] = q_ref[...].astype(jnp.float32) * scale
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def dequantize_blocks(q: jax.Array, scales: jax.Array, *,
+                      interpret: bool = True) -> jax.Array:
+    """q: (H, K, bs, D) int8, scales: (H, K) f32 -> (H, K, bs, D) f32."""
+    H, K, bs, D = q.shape
+    assert scales.shape == (H, K)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=0,
+        grid=(H, K),
+        in_specs=[
+            pl.BlockSpec((1, 1, bs, D), lambda h, i: (h, i, 0, 0)),
+            pl.BlockSpec((1, 1), lambda h, i: (h, i)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bs, D), lambda h, i: (h, i, 0, 0)),
+    )
+    return pl.pallas_call(
+        _dequant_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((H, K, bs, D), jnp.float32),
+        interpret=interpret,
+    )(q, scales.astype(jnp.float32))
+
+
+def _dequant_scatter_kernel(dest_ref, q_ref, scale_ref, pool_in_ref,
+                            pool_out_ref):
+    del pool_in_ref  # aliased with pool_out_ref; unvisited blocks persist
+    scale = scale_ref[0, 0]
+    pool_out_ref[...] = (q_ref[...].astype(jnp.float32) * scale
+                         ).astype(pool_out_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def dequantize_scatter_blocks(pool: jax.Array, q: jax.Array,
+                              scales: jax.Array, dest_blocks: jax.Array, *,
+                              interpret: bool = True) -> jax.Array:
+    """Fused dequant + head-major block scatter (quantized FlashH2D restore).
+
+    pool: (H, NB, bs, D) fp device slots; q: (H, K, bs, D) int8 payload;
+    scales: (H, K) f32; dest_blocks: (K,) int32 destination block ids.
+    Returns the updated pool (aliased in place) — the int8 H2D payload
+    dequantizes on the VPU as each (head, block) tile lands, so the
+    restore window still sees exactly one fused launch per layer."""
+    H, NB, bs, D = pool.shape
+    K = dest_blocks.shape[0]
+    assert q.shape == (H, K, bs, D)
+    assert scales.shape == (H, K)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(H, K),
+        in_specs=[
+            pl.BlockSpec((1, 1, bs, D),
+                         lambda h, i, dref: (h, i, 0, 0)),        # q
+            pl.BlockSpec((1, 1),
+                         lambda h, i, dref: (h, i)),              # scales
+            pl.BlockSpec((1, 1, bs, D),
+                         lambda h, i, dref: (h, dref[i], 0, 0)),  # pool in
+        ],
+        out_specs=pl.BlockSpec((1, 1, bs, D),
+                               lambda h, i, dref: (h, dref[i], 0, 0)),
+    )
+    return pl.pallas_call(
+        _dequant_scatter_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct(pool.shape, pool.dtype),
+        input_output_aliases={3: 0},  # pool (arg idx incl. prefetch) -> out 0
+        interpret=interpret,
+    )(dest_blocks.astype(jnp.int32), q, scales.astype(jnp.float32), pool)

@@ -43,6 +43,41 @@ def scatter_blocks(pool: jax.Array, new_kv: jax.Array,
     return pool.at[dest_blocks].set(blocks)
 
 
+def quantize_blocks(blocks: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """int8 offload-quant oracle: blocks (H, K, bs, D) fp ->
+    (q (H, K, bs, D) int8, scales (H, K) f32).
+
+    Symmetric per-(head, block) quantization: scale = amax/127 over each
+    (bs, D) tile, q = clip(rint(x/scale), -127, 127).  All-zero blocks get
+    scale 0 (and quantize to 0) — dequant maps them back to exact zeros."""
+    x = blocks.astype(jnp.float32)
+    amax = jnp.max(jnp.abs(x), axis=(-2, -1))
+    scales = amax / 127.0
+    # reciprocal-multiply, NOT x/scale — keeps exact .5 rounding
+    # boundaries identical across the kernel / ref / numpy paths (XLA
+    # rewrites division inconsistently between compilation contexts)
+    inv = jnp.where(scales > 0.0,
+                    1.0 / jnp.where(scales > 0.0, scales, 1.0), 1.0)
+    q = jnp.clip(jnp.rint(x * inv[..., None, None]), -127.0, 127.0)
+    return q.astype(jnp.int8), scales
+
+
+def dequantize_blocks(q: jax.Array, scales: jax.Array) -> jax.Array:
+    """Inverse oracle: q (H, K, bs, D) int8, scales (H, K) ->
+    (H, K, bs, D) f32."""
+    return q.astype(jnp.float32) * scales[..., None, None]
+
+
+def dequantize_scatter_blocks(pool: jax.Array, q: jax.Array,
+                              scales: jax.Array, dest_blocks: jax.Array
+                              ) -> jax.Array:
+    """Fused dequant-restore oracle: pool (H, NB, bs, D); q (H, K, bs, D)
+    int8; scales (H, K); dest_blocks (K,).  Returns pool with the
+    dequantized blocks placed (quantized ``scatter_blocks_hkv``)."""
+    new = dequantize_blocks(q, scales).astype(pool.dtype)
+    return pool.at[:, dest_blocks].set(new)
+
+
 def block_score(q: jax.Array, meta_min: jax.Array, meta_max: jax.Array
                 ) -> jax.Array:
     """Quest cuboid upper-bound scores, group-max over GQA query heads.

@@ -68,6 +68,43 @@ def fused_transfer_time(hw: HardwareSpec, total_bytes: int) -> float:
             + total_bytes / (hw.host_link_bw * hw.link_eff_fused))
 
 
+QUANT_SCALE_BYTES = 4  # f32 scale per (kv-head, block) per tensor (int8 tier)
+
+
+def offload_block_bytes(n_kv_heads: int, head_dim: int, block_size: int,
+                        kv_factor: int = 2, dtype_bytes: int = 2,
+                        quant: str = "none") -> int:
+    """Wire bytes of ONE KV block (one layer, all kv heads, K+V) as stored
+    in the DRAM offload tier — what one FlashH2D/FlashD2H block transfer
+    actually moves.
+
+    ``quant="none"``: elements x ``dtype_bytes``.  ``quant="int8"``: 1 B
+    per element + ``QUANT_SCALE_BYTES`` per (kv-head, block) per tensor —
+    a ~``dtype_bytes``x shrink for realistic block sizes.  The engine
+    charges the overlap model's per-layer transfer bytes with this, so the
+    modeled transfer time reflects the tier."""
+    elems_per_head = block_size * head_dim
+    if quant == "int8":
+        per_head = elems_per_head + QUANT_SCALE_BYTES
+    elif quant == "none":
+        per_head = elems_per_head * dtype_bytes
+    else:
+        raise ValueError(f"offload_block_bytes: unknown quant {quant!r}")
+    return n_kv_heads * per_head * kv_factor
+
+
+def offload_bytes_per_token(n_kv_heads: int, head_dim: int, block_size: int,
+                            kv_factor: int = 2, dtype_bytes: int = 2,
+                            quant: str = "none") -> float:
+    """Per-token amortized wire bytes of the offload tier (one layer, all
+    kv heads, K+V): ``offload_block_bytes / block_size``.  The scale
+    overhead amortizes across the block's tokens, so int8 approaches
+    exactly half the bf16 size as ``block_size`` grows."""
+    return offload_block_bytes(n_kv_heads, head_dim, block_size,
+                               kv_factor=kv_factor, dtype_bytes=dtype_bytes,
+                               quant=quant) / block_size
+
+
 def allgather_time(hw: HardwareSpec, total_bytes: int,
                    n_shards: int) -> float:
     """Ring all-gather of `total_bytes` (the FULL gathered size) across

@@ -197,6 +197,15 @@ class EngineConfig:
     # that re-selected the block, so the forward reads zeros under eviction
     # pressure and outputs diverge — supported for demonstration, default
     # off.  See docs/architecture.md §3.
+    offload_quant: str = "none"
+    # DRAM offload tier storage format: "none" (default — host pools store
+    # fp blocks; every greedy-equivalence oracle runs here) | "int8"
+    # (pools store symmetric int8 with one f32 scale per (layer, kv-head,
+    # block) per tensor; blocks quantize on the FlashD2H save path and
+    # dequantize on the FlashH2D restore path, so D2H+H2D wire bytes —
+    # TransferStats, obs spans, and the cost model's per-layer transfer
+    # charges — shrink ~dtype_bytes x while decode output stays within the
+    # bench_accuracy cosine bound).  See docs/architecture.md §12.
     obs: Optional[bool] = None
     # True: the obs layer is live — the engine builds a Tracer (Chrome
     # trace-event JSON, one lane per thread; see src/repro/obs/) and
@@ -270,6 +279,10 @@ class ServingEngine:
             raise ValueError(f"unknown stage_dispatch "
                              f"{eng.stage_dispatch!r}; "
                              f"expected 'async' or 'sync'")
+        if eng.offload_quant not in ("none", "int8"):
+            raise ValueError(f"unknown offload_quant "
+                             f"{eng.offload_quant!r}; "
+                             f"expected 'none' or 'int8'")
         if eng.hybrid_plane == "mixed" and not (
                 eng.batched_decode and eng.decode_plane == "staged"
                 and eng.prefill_mode == "layer_segmented"
@@ -339,8 +352,17 @@ class ServingEngine:
                 max_inject_tokens=inject, segment_tokens=seg_tokens,
                 ws_control=eng.ws_control),
             self.geom, cfg.num_layers, cfg.dsa.top_k_blocks)
-        self.kv_mgr = KVCacheManager(self.geom, eng.hbm_budget_bytes)
+        self.kv_mgr = KVCacheManager(self.geom, eng.hbm_budget_bytes,
+                                     offload_quant=eng.offload_quant)
         self.kv_mgr.tracer = self.tracer
+        # wire bytes of one (layer, block) transfer at the offload tier's
+        # STORED size — what the cost model charges per moved block (int8
+        # payload + scales under offload_quant="int8"; the modeled bf16
+        # size otherwise)
+        self._offload_block_bytes = cm.offload_block_bytes(
+            self.geom.num_kv_heads, self.geom.head_dim,
+            self.geom.block_size, kv_factor=self.geom.kv_factor,
+            dtype_bytes=self.geom.dtype_bytes, quant=eng.offload_quant)
         self.states: Dict[str, _ReqState] = {}
         self._pending: List[Request] = []      # not yet arrived
         self.now = 0.0
@@ -871,8 +893,7 @@ class ServingEngine:
         done: List[Request] = []
         fp = 0
         drop = self.eng.drop_evicted_device_blocks
-        per_block_bytes = (self.geom.block_bytes_per_head
-                           * self.geom.num_kv_heads)
+        per_block_bytes = self._offload_block_bytes
         prefill_by_layer = [0.0] * L
         loads_total = [0]
         spent: Dict[str, int] = {}
@@ -1564,8 +1585,7 @@ class ServingEngine:
             {rid: [] for rid in req_ids}
         pending_evict: Dict[str, set] = {rid: set() for rid in req_ids}
         drop = self.eng.drop_evicted_device_blocks
-        per_block_bytes = (self.geom.block_bytes_per_head
-                           * self.geom.num_kv_heads)
+        per_block_bytes = self._offload_block_bytes
         loads_total = [0]
 
         worker = self._stage_worker() if self._stage_async else None
@@ -1908,8 +1928,9 @@ class ServingEngine:
                     self.hw, self.mc, max(len(plan.decode_reqs), 1),
                     attended) if plan.decode_reqs else 0.0
                 t_load = cm.fused_transfer_time(
-                    self.hw, iter_loads * self.geom.block_bytes_per_head
-                    * self.geom.num_kv_heads) if iter_loads else 0.0
+                    self.hw,
+                    iter_loads * self._offload_block_bytes) \
+                    if iter_loads else 0.0
                 t_iter = t_dec + t_load + t_prefill
         self.now += max(t_iter, 1e-9)
         # stamp the times that were logically produced "at end of iteration"
@@ -1983,6 +2004,9 @@ class ServingEngine:
             "kv.misses": float(ts.misses),
             "kv.evictions": float(ts.evictions),
             "kv.hbm_budget_bytes": float(self.eng.hbm_budget_bytes),
+            # wire bytes one (layer, block) transfer moves at the offload
+            # tier's stored size (int8 + scales when offload_quant="int8")
+            "kv.offload_block_bytes": float(self._offload_block_bytes),
             "engine.iterations": float(self.iterations),
             "engine.now_s": float(self.now),
             "engine.decode_step_calls": float(self.decode_step_calls),

@@ -60,6 +60,11 @@ FIXTURES = {
         _driver_target("bad_double_d2h", "bad_double_d2h.py",
                        "BadPlane.step", "staged-decode"),
         pc.RULE_FUSED_TRANSFER),
+    "bad_quant_double_restore": (
+        _driver_target("bad_quant_double_restore",
+                       "bad_quant_double_restore.py", "BadPlane.step",
+                       "staged-decode"),
+        pc.RULE_FUSED_TRANSFER),
     "bad_mixed_double_stage": (
         _driver_target("bad_mixed_double_stage",
                        "bad_mixed_double_stage.py",

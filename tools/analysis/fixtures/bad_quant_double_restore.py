@@ -1,0 +1,21 @@
+"""Seeded violation: a quantized-tier driver that lands its H2D payload
+TWICE per (layer, group) window — once via the fp restore and once via
+the fused dequant-restore (``dequantize_scatter_blocks``, which counts as
+a restore like ``restore_blocks_fused``).  The fused (de)quant kernels
+themselves (``quantize_blocks`` fused into the save, kind "quant") do NOT
+count as extra transfers — only the duplicated restore flags.  Analyzed
+as source only; never imported."""
+
+
+class BadPlane:
+    def step(self, params, fns, host, pool):
+        x = fns.embed(params, None)
+        for i in range(4):
+            sel = fns.select(params, x)
+            q, scales = host.quantize_blocks(sel)       # fused into the save
+            host.save_new_tokens_fused(i, (q, scales))
+            host.load_blocks_fused(i, sel)
+            host.restore_blocks_fused(i, sel)
+            host.dequantize_scatter_blocks(pool, q, scales, sel)  # 2nd restore
+            x = fns.attend(params, x, sel)
+        return fns.logits(params, x)
